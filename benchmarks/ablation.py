@@ -1,0 +1,32 @@
+"""Paper Table 1: {FCFS, VTC, VTC+pred, Equinox+pred} × {Single, MoPE,
+Oracle} — Max/Avg/Var of the accumulated service difference under the
+stochastic synthetic load (§7.2.2), plus Jain-on-HF."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_summary, row, run_sim
+from repro.core import SimConfig
+from repro.workloads import stochastic
+
+ROWS = [
+    ("fcfs", None), ("vtc", None),
+    ("vtc", "single"), ("vtc", "mope"), ("vtc", "oracle"),
+    ("equinox", "single"), ("equinox", "mope"), ("equinox", "oracle"),
+]
+
+
+def run(quick=False):
+    dur = 30.0 if quick else 60.0
+    wl = stochastic(duration=dur)
+    simcfg = SimConfig(max_batch=16, kv_budget_tokens=16000)
+    out = []
+    for sched, pred in ROWS:
+        res, obs, wall = run_sim(sched, wl, pred_kind=pred, simcfg=simcfg,
+                                 max_time=dur)
+        s = fmt_summary(res, obs)
+        d = s["service_diff"]
+        label = f"table1/{sched}" + (f"+{pred}" if pred else "")
+        out.append(row(label, wall,
+                       f"max={d['max']:.0f} avg={d['avg']:.0f} "
+                       f"var={d['var']:.0f} jainHF={s['jain_hf']:.3f} "
+                       f"p50ttft={s['p50_ttft']:.2f}s"))
+    return out

@@ -1,0 +1,36 @@
+"""Paper Fig. 15: α/β sensitivity — latency-fairness vs throughput as α
+goes 0.5 → 0.9 (β = 1-α) on the stochastic load."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_summary, row, run_sim
+from repro.core import HFParams, SimConfig, jain
+from repro.workloads import stochastic
+
+
+def run(quick=False):
+    dur = 30.0 if quick else 60.0
+    wl = stochastic(duration=dur)
+    simcfg = SimConfig(max_batch=16, kv_budget_tokens=16000)
+    out = []
+    results = []
+    for alpha in (0.5, 0.6, 0.7, 0.8, 0.9):
+        p = HFParams(alpha=alpha, beta=round(1 - alpha, 2))
+        res, obs, wall = run_sim("equinox", wl, pred_kind="mope",
+                                 simcfg=simcfg, max_time=dur,
+                                 hf_params=p)
+        s = fmt_summary(res, obs)
+        # latency fairness: Jain over per-client p90 TTFT (paper's metric)
+        per_client = [np.percentile(res.ttfts(c), 90)
+                      for c in ("client1", "client2") if len(res.ttfts(c))]
+        lat_fair = jain([1.0 / max(t, 1e-6) for t in per_client])
+        results.append((alpha, lat_fair, s["throughput_tok_s"], wall, s))
+    max_thr = max(r[2] for r in results)
+    max_fair = max(r[1] for r in results)
+    for alpha, lat_fair, thr, wall, s in results:
+        out.append(row(f"alpha_sweep/a={alpha}", wall,
+                       f"lat_fairness={lat_fair / max_fair:.3f} "
+                       f"throughput={thr / max_thr:.3f} "
+                       f"jainHF={s['jain_hf']:.3f}"))
+    return out

@@ -1,0 +1,57 @@
+"""Shared benchmark plumbing: one simulator run per (scheduler, workload),
+memoised predictors, CSV row helpers."""
+from __future__ import annotations
+
+import copy
+import functools
+import time
+
+from repro.configs import get_config
+from repro.core import (HFObserver, HFParams, SimConfig, Simulator,
+                        make_scheduler, summarize)
+from repro.predictor import MoPE, Oracle, SingleProxy
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import corpus
+
+CM = CostModel(get_config("llama2-7b"), A100_80G)
+TRAIN_CORPUS_N = 8000
+
+
+@functools.lru_cache(maxsize=None)
+def _train_corpus(seed=0):
+    return tuple(corpus(TRAIN_CORPUS_N, seed=seed))
+
+
+def predictor(kind: str, seed=0, epochs=20):
+    if kind == "oracle":
+        return Oracle(CM)
+    if kind == "single":
+        return SingleProxy(CM, list(_train_corpus(seed)), epochs=epochs,
+                           seed=seed)
+    return MoPE(CM, list(_train_corpus(seed)), epochs=epochs, seed=seed)
+
+
+def run_sim(sched_name: str, wl, *, pred_kind=None, simcfg=None,
+            max_time=None, hf_params: HFParams = None, cm=CM):
+    pred = predictor(pred_kind) if pred_kind else None
+    kw = {}
+    if sched_name == "equinox" and hf_params is not None:
+        kw["params"] = hf_params
+    sched = make_scheduler(sched_name, predictor=pred, **kw)
+    obs = HFObserver()
+    sim = Simulator(cm, sched, simcfg or SimConfig(max_batch=48),
+                    observer=obs)
+    t0 = time.monotonic()
+    res = sim.run(copy.deepcopy(list(wl)), max_time=max_time)
+    wall = time.monotonic() - t0
+    return res, obs, wall
+
+
+def row(name: str, wall_s: float, derived: str) -> str:
+    return f"{name},{wall_s * 1e6:.0f},{derived}"
+
+
+def fmt_summary(res, obs, clients=("client1", "client2")) -> dict:
+    s = summarize(res, clients=list(clients))
+    s["jain_hf"] = obs.jain_index()
+    return s

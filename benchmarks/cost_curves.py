@@ -1,0 +1,43 @@
+"""Paper Fig. 2 / Fig. 16: why token count fails as a cost proxy.
+
+From the cost model + simulator: (a) latency grows monotonically with
+tokens; (b) throughput is non-monotone (rises with amortization, falls
+when KV reads dominate); (c) utilization is stepwise in request length
+(batch-refresh frequency).  Same total token budget in every cell."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import CM, row, run_sim
+from repro.core import Request, SimConfig
+
+
+def _uniform_requests(n, in_len, out_len, rate):
+    return [Request(rid=i, client="c", arrival=i / rate, prompt_len=in_len,
+                    output_len=out_len, keywords=("chat",))
+            for i in range(n)]
+
+
+def run(quick=False):
+    out = []
+    total_tokens = 60_000 if quick else 160_000
+    lat_rows, thr_rows, util_rows = [], [], []
+    t0 = time.monotonic()
+    for per_req in (64, 128, 256, 512, 1024, 2048):
+        n = max(total_tokens // per_req, 4)
+        in_len = max(per_req // 2, 8)
+        out_len = per_req - in_len
+        rate = max(2000.0 / per_req, 0.5)   # fixed total token rate
+        wl = _uniform_requests(n, in_len, out_len, rate)
+        res, obs, _ = run_sim("fcfs", wl, simcfg=SimConfig(max_batch=32))
+        lats = res.latencies()
+        lat_rows.append(f"{per_req}:{np.mean(lats):.2f}s")
+        thr_rows.append(f"{per_req}:{res.throughput_tokens_per_s():.0f}")
+        util_rows.append(f"{per_req}:{res.mean_util():.2f}")
+    wall = time.monotonic() - t0
+    out.append(row("fig2a/latency_vs_tokens", wall, " ".join(lat_rows)))
+    out.append(row("fig2b/throughput_vs_tokens", wall, " ".join(thr_rows)))
+    out.append(row("fig2c/util_vs_tokens", wall, " ".join(util_rows)))
+    return out

@@ -1,0 +1,35 @@
+"""Paper Fig. 13: Jain's-index-on-HF comparison across schedulers on the
+27-client LMSYS-like trace (the cross-system fairness figure; our three
+'serving systems' are the three simulator capacity setups)."""
+from __future__ import annotations
+
+from benchmarks.common import row, run_sim
+from repro.core import SimConfig
+from repro.workloads import lmsys_like
+
+SETUPS = {
+    # setup -> (SimConfig, offered total rate): each sized into contention
+    "s-lora-like": (SimConfig(max_batch=16, kv_budget_tokens=16000), 10.0),
+    "vllm-like": (SimConfig(max_batch=48), 28.0),
+    "sglang-like": (SimConfig(max_batch=64, prefill_chunk=1024), 36.0),
+}
+
+
+def run(quick=False):
+    dur = 40.0 if quick else 90.0
+    out = []
+    for setup, (simcfg, rate) in SETUPS.items():
+        wl = lmsys_like(n_clients=27, duration=dur, total_rate=rate)
+        jains = {}
+        wall_tot = 0.0
+        for sched, pred in (("fcfs", None), ("vtc", None),
+                            ("equinox", "mope")):
+            res, obs, wall = run_sim(sched, wl, pred_kind=pred,
+                                     simcfg=simcfg, max_time=dur)
+            jains[sched] = obs.jain_index()
+            wall_tot += wall
+        gain = (jains["equinox"] / max(jains["vtc"], jains["fcfs"]) - 1) * 100
+        out.append(row(f"jains/{setup}", wall_tot,
+                       f"fcfs={jains['fcfs']:.3f} vtc={jains['vtc']:.3f} "
+                       f"equinox={jains['equinox']:.3f} gain={gain:+.1f}%"))
+    return out

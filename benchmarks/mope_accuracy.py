@@ -1,0 +1,62 @@
+"""Paper Figs. 4 / 7: prediction quality.
+
+- L1 error: single proxy vs unified vs MoPE with 1/3/5 experts
+  (paper: 80 -> 33 -> 25 on LMSYS);
+- router accuracy vs training-set size (paper Fig. 7c, peak ~80%);
+- per-length-bucket MAE breakdown (paper Fig. 4b);
+- router overhead per prompt (paper: 0.02 ms).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import CM, row
+from repro.core import Request
+from repro.predictor import (MoPE, SingleProxy, l1_error, router_accuracy,
+                             train_router)
+from repro.workloads import corpus
+
+
+def run(quick=False):
+    n_train = 6000 if quick else 12000
+    epochs = 20 if quick else 35
+    train = corpus(n_train, seed=0)
+    test = corpus(3000, seed=99)
+    out = []
+
+    t0 = time.monotonic()
+    single = SingleProxy(CM, train, epochs=epochs, calibrate=False)
+    e1 = l1_error(single, test)
+    out.append(row("mope_acc/single_proxy", time.monotonic() - t0,
+                   f"L1={e1:.1f}"))
+    for k in ((3,) if quick else (3, 5)):
+        t0 = time.monotonic()
+        m = MoPE(CM, train, n_experts=k, epochs=epochs, calibrate=False)
+        ek = l1_error(m, test)
+        out.append(row(f"mope_acc/mope_{k}experts", time.monotonic() - t0,
+                       f"L1={ek:.1f} vs_single={ek / e1:.2f} "
+                       f"router_acc={router_accuracy(m.router, test):.3f}"))
+
+    # router accuracy vs corpus size (Fig 7c)
+    sizes = (1000, 4000, 12000) if quick else (1000, 4000, 12000, 40000)
+    accs = []
+    t0 = time.monotonic()
+    for n in sizes:
+        r = train_router(corpus(n, seed=1), n_experts=3)
+        accs.append(f"{n}:{router_accuracy(r, test):.3f}")
+    out.append(row("mope_acc/router_curve", time.monotonic() - t0,
+                   " ".join(accs)))
+
+    # router latency (Fig 7d: paper 0.02 ms)
+    m3 = MoPE(CM, train[:2000], epochs=5)
+    reqs = [Request(rid=i, client="c", arrival=0.0, prompt_len=pl,
+                    output_len=o, keywords=kw)
+            for i, (kw, pl, o) in enumerate(test[:500])]
+    t0 = time.monotonic()
+    for r in reqs:
+        m3.router.classify(r.keywords, r.prompt_len)
+    dt = (time.monotonic() - t0) / len(reqs)
+    out.append(row("mope_acc/router_overhead", dt, f"{dt * 1e3:.3f}ms/prompt"))
+    return out

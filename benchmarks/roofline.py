@@ -1,0 +1,218 @@
+"""Deliverable (g): three-term roofline per (arch × shape) on the
+single-pod v5e-256 mesh, derived from the dry-run artifacts in
+experiments/dryrun/.
+
+    compute term    = MODEL_FLOPS / (chips × peak)
+    memory term     = step bytes  / (chips × HBM bw)
+    collective term = wire bytes/device / link bw
+
+MODEL_FLOPS and step-byte formulas are analytic (explicit below) because
+the CPU-backend ``cost_analysis()`` counts scan bodies once (verified:
+a 10-step scanned matmul reports 1 body) — the raw HLO numbers are still
+reported alongside as ``hlo_flops`` with the MODEL_FLOPS/HLO ratio.
+Collective bytes combine the HLO-parsed top-level collectives (grad
+all-reduce, resharding) with the analytic per-layer TP terms that live
+inside scan bodies.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import ATTN, ATTN_LOCAL, ATTN_MLA
+from repro.launch.specs import config_for
+from repro.serving.costmodel import kv_bytes_per_token, kv_read_bytes
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+CHIPS = 256
+MODEL_AXIS = 16
+DATA_AXIS = 16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def _attn_layers(cfg):
+    return [(k, cfg.window if k == ATTN_LOCAL or (k == ATTN_MLA and
+                                                  cfg.window) else 0)
+            for k in cfg.layer_kinds()
+            if k in (ATTN, ATTN_LOCAL, ATTN_MLA)]
+
+
+def model_flops(cfg, shape):
+    """Analytic model FLOPs for ONE step (global, fwd[+bwd])."""
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim()
+    n_act = cfg.n_active_params()
+    attn = _attn_layers(cfg)
+
+    def attn_fwd(tokens_per_seq, ctx):
+        f = 0.0
+        for _, w in attn:
+            eff = min(ctx, w) if w else ctx
+            f += 4 * cfg.n_heads * hd * tokens_per_seq * eff
+        return f
+
+    if shape.mode == "train":
+        tok = B * S
+        # 6·N_active·D + 3× causal attention forward
+        return 6 * n_act * tok + 3 * B * attn_fwd(S, S) / 2
+    if shape.mode == "prefill":
+        tok = B * S
+        return 2 * n_act * tok + B * attn_fwd(S, S) / 2
+    # decode: one token vs ctx
+    return 2 * n_act * B + B * attn_fwd(1, S)
+
+
+def step_bytes(cfg, shape):
+    """Analytic HBM traffic for ONE step (global)."""
+    B, S = shape.global_batch, shape.seq_len
+    pbytes = cfg.n_params() * 2
+    d = cfg.d_model
+    L = cfg.n_layers
+    if shape.mode == "train":
+        tok = B * S
+        act = 2 * tok * d * L * 2          # residual save + re-read (remat)
+        opt = cfg.n_params() * 16          # f32 mu/nu read+write
+        return 3 * pbytes + opt + act      # W read (fwd+bwd) + grad write
+    if shape.mode == "prefill":
+        tok = B * S
+        per_layer, _fixed = kv_bytes_per_token(cfg)
+        kv_write = sum(min(pt * min(S, w or S), pt * S)
+                       for pt, w in per_layer) * B
+        act = 2 * tok * d * L
+        return pbytes + act + kv_write
+    # decode
+    return pbytes + B * kv_read_bytes(cfg, S)
+
+
+def collective_bytes_analytic(cfg, shape):
+    """Per-device wire bytes for the in-scan TP collectives the HLO parse
+    misses: ~2 all-reduces of the residual activation per layer (ring:
+    2·size·(k-1)/k), plus the grad reduce for training."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    k = MODEL_AXIS
+    if shape.mode == "train":
+        tok_dev = B * S / CHIPS
+        per_layer = 2 * 2 * (tok_dev * d * 2) * (k - 1) / k
+        grads = 2 * (cfg.n_params() * 2 / MODEL_AXIS) * \
+            (DATA_AXIS - 1) / DATA_AXIS
+        return L * per_layer + grads
+    if shape.mode == "prefill":
+        tok_dev = B * S / DATA_AXIS        # batch over data only
+        return L * 2 * 2 * (tok_dev * d * 2) * (k - 1) / k
+    tok_dev = max(B / DATA_AXIS, 1)
+    return L * 2 * 2 * (tok_dev * d * 2) * (k - 1) / k
+
+
+def load_dryrun(arch, shape_name, mesh="single"):
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape_name}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_row(arch, shape_name):
+    cfg0 = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for(cfg0, shape)
+    mf = model_flops(cfg, shape)
+    t_comp = mf / (CHIPS * PEAK)
+    sb = step_bytes(cfg, shape)
+    t_mem = sb / (CHIPS * HBM)
+    dr = load_dryrun(arch, shape_name)
+    hlo_flops = dr["cost"]["flops"] * CHIPS if dr else 0.0   # per-device HLO
+    coll_hlo = dr["collectives"]["total_bytes"] if dr else 0.0
+    coll = coll_hlo + collective_bytes_analytic(cfg, shape)
+    t_coll = coll / LINK
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    ratio = mf / hlo_flops if hlo_flops else float("nan")
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": mf, "hlo_flops_global": hlo_flops,
+        "model_over_hlo": ratio,
+        "mem_gib_per_dev": (dr["memory"]["argument_bytes"]
+                            + dr["memory"]["temp_bytes"]) / 2 ** 30
+        if dr else None,
+        "step_bytes": sb, "collective_bytes_per_dev": coll,
+    }
+
+
+def kvq_row():
+    """§Perf A3 variant: deepseek-7b decode with the int8 KV cache."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("deepseek-7b"), kv_quant=True)
+    shape = INPUT_SHAPES["decode_32k"]
+    mf = model_flops(cfg, shape)
+    t_comp = mf / (CHIPS * PEAK)
+    # int8 payload + bf16 per-(token, head) scales
+    kv_int8 = kv_read_bytes(cfg, shape.seq_len, ) / 2 \
+        + cfg.n_layers * cfg.n_kv_heads * 2 * shape.seq_len
+    sb = cfg.n_params() * 2 + shape.global_batch * kv_int8
+    t_mem = sb / (CHIPS * HBM)
+    dr = load_dryrun("deepseek-7b", "decode_32k@kvq")
+    coll = (dr["collectives"]["total_bytes"] if dr else 0.0) \
+        + collective_bytes_analytic(cfg, shape)
+    t_coll = coll / LINK
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    return {
+        "arch": "deepseek-7b", "shape": "decode_32k@kvq(int8)",
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops": mf,
+        "hlo_flops_global": dr["cost"]["flops"] * CHIPS if dr else 0.0,
+        "model_over_hlo": float("nan"),
+        "mem_gib_per_dev": (dr["memory"]["argument_bytes"]
+                            + dr["memory"]["temp_bytes"]) / 2 ** 30
+        if dr else None,
+        "step_bytes": sb, "collective_bytes_per_dev": coll,
+    }
+
+
+def all_rows():
+    rows = [roofline_row(a, s) for a in ASSIGNED_ARCHS
+            for s in INPUT_SHAPES]
+    if load_dryrun("deepseek-7b", "decode_32k@kvq") is not None:
+        rows.append(kvq_row())
+    return rows
+
+
+def run(quick=False):
+    from benchmarks.common import row
+    out = []
+    for r in all_rows():
+        frac = {k: r[f"t_{k}_s"] / max(sum(r[f"t_{k2}_s"] for k2 in
+                                           ("compute", "memory",
+                                            "collective")), 1e-30)
+                for k in ("compute", "memory", "collective")}
+        derived = (f"comp={r['t_compute_s'] * 1e3:.2f}ms "
+                   f"mem={r['t_memory_s'] * 1e3:.2f}ms "
+                   f"coll={r['t_collective_s'] * 1e3:.2f}ms "
+                   f"bound={r['bottleneck']} "
+                   f"mflops/hlo={r['model_over_hlo']:.1f} "
+                   f"dev_mem={r['mem_gib_per_dev']:.1f}GiB"
+                   if r["mem_gib_per_dev"] is not None else "no-dryrun")
+        out.append(row(f"roofline/{r['arch']}/{r['shape']}", 0.0, derived))
+    return out
+
+
+def dump_json(path):
+    with open(path, "w") as f:
+        json.dump(all_rows(), f, indent=1)
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    PYTHONPATH=src python -m benchmarks.run --quick    # smaller loads
+    PYTHONPATH=src python -m benchmarks.run --only jains roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("cost_curves", "Fig 2/16: token count fails as a cost proxy"),
+    ("mope_accuracy", "Fig 4/7: MoPE vs single proxy, router curve"),
+    ("scenarios", "Figs 9/10/17/18: synthetic fairness scenarios"),
+    ("ablation", "Table 1: scheduler x predictor service differences"),
+    ("jains", "Fig 13: Jain-on-HF across serving setups"),
+    ("alpha_sweep", "Fig 15: alpha/beta fairness-throughput trade"),
+    ("trace_serving", "Fig 11/12: ShareGPT-like trace on the real engine"),
+    ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
+    ("roofline", "Deliverable (g): three-term roofline per arch x shape"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name, desc in BENCHES:
+        if args.only and mod_name not in args.only:
+            continue
+        print(f"# {mod_name}: {desc}", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for line in mod.run(quick=args.quick):
+                print(line, flush=True)
+        except Exception:  # noqa: BLE001 — benchmark isolation
+            failures += 1
+            print(f"# FAILED {mod_name}", flush=True)
+            traceback.print_exc()
+        print(f"# {mod_name} done in {time.monotonic() - t0:.1f}s",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

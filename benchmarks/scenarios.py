@@ -1,0 +1,43 @@
+"""Paper Figs. 9 / 10 / 17 / 18: the four synthetic scenarios, each
+compared across FCFS / VTC / Equinox(+MoPE)."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_summary, row, run_sim
+from repro.core import SimConfig
+from repro.workloads import SCENARIOS
+
+SETUPS = {
+    # scenario -> (duration, SimConfig, measure-cutoff).  Batch / KV
+    # budgets sized so each scenario sits in the paper's contention
+    # regime (balanced: alternating light/heavy; overload: saturated).
+    "balanced": (120.0, SimConfig(max_batch=20,
+                                  kv_budget_tokens=20000), 120.0),  # Fig 9
+    "stochastic": (60.0, SimConfig(max_batch=16,
+                                   kv_budget_tokens=16000), 60.0),  # Fig 10
+    "overload": (120.0, SimConfig(max_batch=48), 120.0),      # Fig 17
+    "dynamic": (120.0, SimConfig(max_batch=12,
+                                 kv_budget_tokens=12000), 120.0),   # Fig 18
+}
+
+SCHEDULERS = [("fcfs", None), ("vtc", None), ("equinox", "mope")]
+
+
+def run(quick=False):
+    rows = []
+    for scen, (dur, simcfg, cutoff) in SETUPS.items():
+        if quick:
+            dur, cutoff = dur / 3, cutoff / 3
+        wl = SCENARIOS[scen](duration=dur)
+        for sched, pred in SCHEDULERS:
+            res, obs, wall = run_sim(sched, wl, pred_kind=pred,
+                                     simcfg=simcfg, max_time=cutoff)
+            s = fmt_summary(res, obs)
+            label = f"{scen}/{sched}" + (f"+{pred}" if pred else "")
+            derived = (f"thr={s['throughput_tok_s']:.0f}tok/s "
+                       f"p50ttft={s['p50_ttft']:.2f}s "
+                       f"util={s['mean_util']:.2f} "
+                       f"sdiff_avg={s['service_diff']['avg']:.0f} "
+                       f"sdiff_max={s['service_diff']['max']:.0f} "
+                       f"jainHF={s['jain_hf']:.3f}")
+            rows.append(row(label, wall, derived))
+    return rows

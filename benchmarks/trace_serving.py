@@ -1,0 +1,57 @@
+"""Paper Figs. 11 / 12-like: ShareGPT-like trace through the REAL JAX
+engine (reduced model on CPU) — end-to-end pipeline timing with modeled
+target-hardware metrics, FCFS vs VTC vs Equinox."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import CM, row
+from repro.configs import SMOKE_FACTORIES
+from repro.core import jain, make_scheduler
+from repro.predictor import MoPE
+from repro.workloads import corpus, sharegpt_like
+
+SCALE = 16   # token-length shrink factor for the CPU-sized model
+
+
+def _scaled_predictor():
+    """MoPE trained on the same 1/SCALE-shrunk length distribution the
+    engine serves (predictor and workload must share units)."""
+    data = [(kw, max(4, pl // SCALE), max(2, min(o // SCALE, 60)))
+            for kw, pl, o in corpus(6000, seed=0)]
+    return MoPE(CM, data, epochs=15)
+
+
+def run(quick=False):
+    n_per = 10 if quick else 24
+    out = []
+    for sched_name, pred_kind in (("fcfs", None), ("vtc", None),
+                                  ("equinox", "mope")):
+        reqs = sharegpt_like(n_clients=4, n_per_client=n_per,
+                             rate_per_client=8.0, seed=5)
+        for r in reqs:                       # shrink for the CPU model
+            r.prompt_len = max(4, r.prompt_len // SCALE)
+            r.output_len = max(2, min(r.output_len // SCALE, 60))
+        pred = _scaled_predictor() if pred_kind else None
+        sched = make_scheduler(sched_name, predictor=pred)
+        cfg = SMOKE_FACTORIES["llama2-7b"]()
+        from repro.serving.engine import ServingEngine
+        eng = ServingEngine(cfg, sched, max_slots=3, max_len=256,
+                            cost_model=CM, kv_budget_tokens=400)
+        t0 = time.monotonic()
+        done = eng.run(reqs)
+        wall = time.monotonic() - t0
+        ttfts = np.array([r.ttft() for r in done if r.ttft() is not None])
+        thr = sum(r.prompt_len + r.generated for r in done) / max(
+            eng.t_model, 1e-9)
+        label = f"trace_engine/{sched_name}" + (f"+{pred_kind}"
+                                                if pred_kind else "")
+        out.append(row(label, wall,
+                       f"served={len(done)} thr={thr:.0f}tok/s "
+                       f"p50ttft={np.percentile(ttfts, 50):.3f}s "
+                       f"p90ttft={np.percentile(ttfts, 90):.3f}s "
+                       f"jain_svc={jain(list(sched.service.values())):.3f} "
+                       f"iters={eng.iterations}"))
+    return out

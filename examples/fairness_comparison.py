@@ -1,0 +1,56 @@
+"""Scenario driver: reproduce a paper figure from the command line.
+
+Runs FCFS / VTC / Equinox on one of the paper's synthetic scenarios in
+the discrete-event simulator (A100 cost model) and prints the fairness
+table — the script behind Figs. 9/10/17/18.
+
+    PYTHONPATH=src python examples/fairness_comparison.py \
+        --scenario stochastic --duration 60
+"""
+import argparse
+import copy
+
+from repro.configs import get_config
+from repro.core import (HFObserver, SimConfig, Simulator, make_scheduler,
+                        summarize)
+from repro.predictor import MoPE
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import SCENARIOS, corpus
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="stochastic",
+                    choices=sorted(SCENARIOS))
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--kv-budget", type=int, default=16000)
+    args = ap.parse_args()
+
+    cm = CostModel(get_config("llama2-7b"), A100_80G)
+    wl = SCENARIOS[args.scenario](duration=args.duration)
+    mope = MoPE(cm, corpus(6000, seed=0), epochs=15)
+    simcfg = SimConfig(max_batch=args.max_batch,
+                       kv_budget_tokens=args.kv_budget)
+
+    print(f"scenario={args.scenario} duration={args.duration}s "
+          f"requests={len(wl)}")
+    hdr = (f"{'scheduler':<14} {'thr tok/s':>9} {'p50 ttft':>9} "
+           f"{'util':>5} {'sdiff avg':>10} {'sdiff max':>10} {'jainHF':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name, pred in (("fcfs", None), ("vtc", None), ("equinox", mope)):
+        sched = make_scheduler(name, predictor=pred)
+        obs = HFObserver()
+        sim = Simulator(cm, sched, simcfg, observer=obs)
+        res = sim.run(copy.deepcopy(wl), max_time=args.duration)
+        s = summarize(res, clients=["client1", "client2"])
+        print(f"{name:<14} {s['throughput_tok_s']:>9.0f} "
+              f"{s['p50_ttft']:>8.2f}s {s['mean_util']:>5.2f} "
+              f"{s['service_diff']['avg']:>10.0f} "
+              f"{s['service_diff']['max']:>10.0f} "
+              f"{obs.jain_index():>7.3f}")
+
+
+if __name__ == "__main__":
+    main()

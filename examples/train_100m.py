@@ -1,0 +1,55 @@
+"""End-to-end training driver: a ~100M-parameter Llama-family model for
+a few hundred steps on the synthetic Markov corpus, with checkpointing.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+(defaults are sized so a CPU run finishes in a few minutes; pass
+--d-model 768 --layers 12 for the full ~100M on real hardware)
+"""
+import argparse
+
+from repro.configs.base import ModelConfig
+from repro.training import TrainConfig, train
+
+
+def make_cfg(d_model: int, layers: int, vocab: int) -> ModelConfig:
+    return ModelConfig(
+        name=f"llama-{d_model}x{layers}",
+        arch_type="dense",
+        n_layers=layers,
+        d_model=d_model,
+        n_heads=max(d_model // 64, 2),
+        n_kv_heads=max(d_model // 128, 1),
+        d_ff=d_model * 4,
+        vocab_size=vocab,
+        dtype="float32",
+        attn_impl="naive",
+        remat=False,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.d_model, args.layers, args.vocab)
+    print(f"model: {cfg.name}  params≈{cfg.n_params() / 1e6:.1f}M")
+    tc = TrainConfig(batch=args.batch, seq_len=args.seq, steps=args.steps,
+                     peak_lr=args.lr, warmup=20, log_every=20,
+                     ckpt_every=100, ckpt_path=args.ckpt)
+    _, losses = train(cfg, tc)
+    first, last = losses[0][1], losses[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"(uniform entropy {__import__('math').log(args.vocab):.3f}); "
+          f"checkpoints in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Dev scratch: run every smoke arch through loss/prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SMOKE_FACTORIES
+from repro.models import (decode_step, init_cache, init_params, loss_fn,
+                          prefill)
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng):
+    batch = {}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    elif cfg.frontend == "vision_stub":
+        np_ = cfg.n_frontend_tokens
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, np_, cfg.d_model)), jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S - np_)), jnp.int32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S - np_)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    return batch
+
+
+def main():
+    names = sys.argv[1:] or sorted(SMOKE_FACTORIES)
+    rng = np.random.default_rng(0)
+    for name in names:
+        cfg = SMOKE_FACTORIES[name]()
+        params = init_params(jax.random.key(0), cfg)
+        batch = make_batch(cfg, rng)
+        loss = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
+        assert jnp.isfinite(loss), (name, loss)
+        logits, cache = jax.jit(
+            lambda p, b: prefill(p, b, cfg, max_len=S + 8))(params, batch)
+        assert np.isfinite(np.asarray(logits)).all(), name
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, cache = jax.jit(
+            lambda p, t, c: decode_step(p, t, c, cfg))(params, tok, cache)
+        assert np.isfinite(np.asarray(logits2)).all(), name
+        print(f"{name:28s} loss={float(loss):.3f} ok")
+
+
+if __name__ == "__main__":
+    main()

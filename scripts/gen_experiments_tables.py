@@ -1,0 +1,59 @@
+"""Generate the §Dry-run and §Roofline markdown tables for EXPERIMENTS.md
+from experiments/dryrun/*.json."""
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import all_rows, load_dryrun  # noqa: E402
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES  # noqa: E402
+
+
+def dryrun_table():
+    lines = ["| arch | shape | mesh | args GiB | temp GiB | out GiB | "
+             "HLO flops/dev | coll MiB/dev | compile s |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            for mesh in ("single", "multi"):
+                d = load_dryrun(arch, shape, mesh)
+                if d is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING |")
+                    continue
+                m = d["memory"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} "
+                    f"| {m['argument_bytes'] / 2**30:.2f} "
+                    f"| {m['temp_bytes'] / 2**30:.2f} "
+                    f"| {m['output_bytes'] / 2**30:.2f} "
+                    f"| {d['cost']['flops']:.2e} "
+                    f"| {d['collectives']['total_bytes'] / 2**20:.0f} "
+                    f"| {d['compile_s'] + d['lower_s']:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bound | MODEL_FLOPS | MF/HLO | dev mem GiB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in all_rows():
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['bottleneck']}** "
+            f"| {r['model_flops']:.2e} | {r['model_over_hlo']:.1f} "
+            f"| {r['mem_gib_per_dev']:.1f} |"
+            if r["mem_gib_per_dev"] is not None else
+            f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("dryrun", "both"):
+        print("### Dry-run table\n")
+        print(dryrun_table())
+    if which in ("roofline", "both"):
+        print("\n### Roofline table\n")
+        print(roofline_table())

@@ -1,0 +1,34 @@
+"""Architecture config registry.
+
+Importing this package registers every assigned architecture (plus the
+paper's own Llama-2-7B testbed model) under ``get_config(name)``.
+"""
+from repro.configs.base import (INPUT_SHAPES, ModelConfig, ShapeConfig,
+                                get_config, list_archs)
+from repro.configs import (deepseek_7b, deepseek_moe_16b, whisper_large_v3,
+                           recurrentgemma_2b, mamba2_2_7b, granite_3_2b,
+                           starcoder2_7b, minicpm3_4b, mixtral_8x7b,
+                           internvl2_76b, llama2_7b)
+
+SMOKE_FACTORIES = {
+    "deepseek-7b": deepseek_7b.smoke,
+    "deepseek-moe-16b": deepseek_moe_16b.smoke,
+    "whisper-large-v3": whisper_large_v3.smoke,
+    "recurrentgemma-2b": recurrentgemma_2b.smoke,
+    "mamba2-2.7b": mamba2_2_7b.smoke,
+    "granite-3-2b": granite_3_2b.smoke,
+    "starcoder2-7b": starcoder2_7b.smoke,
+    "minicpm3-4b": minicpm3_4b.smoke,
+    "mixtral-8x7b": mixtral_8x7b.smoke,
+    "internvl2-76b": internvl2_76b.smoke,
+    "llama2-7b": llama2_7b.smoke,
+}
+
+ASSIGNED_ARCHS = [
+    "deepseek-7b", "deepseek-moe-16b", "whisper-large-v3",
+    "recurrentgemma-2b", "mamba2-2.7b", "granite-3-2b", "starcoder2-7b",
+    "minicpm3-4b", "mixtral-8x7b", "internvl2-76b",
+]
+
+__all__ = ["INPUT_SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+           "list_archs", "SMOKE_FACTORIES", "ASSIGNED_ARCHS"]

@@ -1,0 +1,19 @@
+"""Equinox's primary contribution: holistic-fairness counters, the HF
+scheduler (+ FCFS/RPM/VTC baselines), the policy-independent HF observer
+and the discrete-event continuous-batching simulator."""
+from repro.core.counters import (DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DELTA,
+                                 OUT_TOKEN_WEIGHT, HFParams, hf_scores,
+                                 rfc_increment, select_min_hf, ufc_increment)
+from repro.core.metrics import (HFObserver, jain, service_difference_stats,
+                                summarize)
+from repro.core.request import Request
+from repro.core.schedulers import (FCFS, RPM, VTC, Equinox, SchedulerBase,
+                                   make_scheduler)
+from repro.core.simulator import SimConfig, SimResult, Simulator
+
+__all__ = ["DEFAULT_ALPHA", "DEFAULT_BETA", "DEFAULT_DELTA",
+           "OUT_TOKEN_WEIGHT", "HFParams", "hf_scores", "rfc_increment",
+           "select_min_hf", "ufc_increment", "HFObserver", "jain",
+           "service_difference_stats", "summarize", "Request", "FCFS",
+           "RPM", "VTC", "Equinox", "SchedulerBase", "make_scheduler",
+           "SimConfig", "SimResult", "Simulator"]

@@ -1,0 +1,91 @@
+"""Policy-independent fairness measurement.
+
+The paper evaluates every scheduler on the *same* yardstick: Jain's
+index over per-client Holistic Fairness values (§7.1), and the
+max/avg/var of the accumulated weighted-service difference (Table 1).
+``HFObserver`` tracks UFC/RFC from *observed* request metrics (not
+predictions) for whatever policy is running, so FCFS / VTC / Equinox are
+scored identically — this is how Fig. 13 can conclude that VTC's HF-based
+fairness is no better than FCFS's.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import counters as C
+from repro.core.request import Request
+
+
+class HFObserver:
+    """Accumulates UFC/RFC per client from actual post-execution metrics."""
+
+    def __init__(self, params: C.HFParams = C.HFParams()):
+        self.p = params
+        self.ufc: Dict[str, float] = {}
+        self.rfc: Dict[str, float] = {}
+
+    def on_admit(self, req: Request, now: float):
+        self.ufc.setdefault(req.client, 0.0)
+        self.rfc.setdefault(req.client, 0.0)
+
+    def on_complete(self, req: Request, now: float, *, latency: float,
+                    tps: float, util: float):
+        """``latency`` is GPU execution time (queue wait excluded)."""
+        wait = max((req.admit_time or req.arrival) - req.arrival, 0.0)
+        self.ufc[req.client] = self.ufc.get(req.client, 0.0) \
+            + C.ufc_increment(req.prompt_len, req.generated, wait, latency,
+                              req.weight, self.p.delta)
+        self.rfc[req.client] = self.rfc.get(req.client, 0.0) \
+            + C.rfc_increment(tps, util, req.weight)
+
+    def hf(self) -> Dict[str, float]:
+        clients = sorted(self.ufc)
+        if not clients:
+            return {}
+        ufc = np.array([self.ufc[c] for c in clients])
+        rfc = np.array([self.rfc[c] for c in clients])
+        hf = C.hf_scores(ufc, rfc, self.p.alpha, self.p.beta)
+        return dict(zip(clients, hf))
+
+    def jain_index(self) -> float:
+        return jain(list(self.hf().values()))
+
+
+def jain(xs) -> float:
+    xs = np.asarray([x for x in xs if np.isfinite(x)], float)
+    if len(xs) == 0 or np.all(xs == 0):
+        return 1.0
+    return float(xs.sum() ** 2 / (len(xs) * np.sum(xs ** 2)))
+
+
+def service_difference_stats(result, c1: str, c2: str,
+                             settle: float = 0.1) -> dict:
+    """Max/avg/var of |service_1 - service_2| (Table 1), skipping the
+    initial ``settle`` fraction while both clients ramp up."""
+    ts, diff = result.service_difference(c1, c2)
+    if len(diff) == 0:
+        return {"max": 0.0, "avg": 0.0, "var": 0.0}
+    k = int(len(diff) * settle)
+    d = diff[k:]
+    return {"max": float(d.max()), "avg": float(d.mean()),
+            "var": float(d.var())}
+
+
+def summarize(result, clients: List[str] = None) -> dict:
+    ttfts = result.ttfts()
+    lats = result.latencies()
+    out = {
+        "throughput_tok_s": result.throughput_tokens_per_s(),
+        "mean_util": result.mean_util(),
+        "p50_ttft": float(np.percentile(ttfts, 50)) if len(ttfts) else None,
+        "p90_ttft": float(np.percentile(ttfts, 90)) if len(ttfts) else None,
+        "mean_latency": float(lats.mean()) if len(lats) else None,
+        "finished": sum(r.state == "finished" for r in result.requests),
+        "total": len(result.requests),
+    }
+    if clients and len(clients) >= 2:
+        out["service_diff"] = service_difference_stats(result, clients[0],
+                                                       clients[1])
+    return out

@@ -1,0 +1,61 @@
+"""Request lifecycle shared by the simulator, the serving engine and the
+schedulers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# request states
+WAITING = "waiting"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+FINISHED = "finished"
+DROPPED = "dropped"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    client: str
+    arrival: float                      # seconds since epoch of the run
+    prompt_len: int
+    output_len: int                     # ground-truth generation length
+    keywords: tuple = ()                # synthetic prompt keywords (router feats)
+    weight: float = 1.0                 # client priority ω_f
+    # predictions (filled by the predictor before scheduling) --------------
+    pred_output_len: Optional[float] = None
+    pred_latency: Optional[float] = None
+    pred_tps: Optional[float] = None
+    pred_util: Optional[float] = None
+    # lifecycle ------------------------------------------------------------
+    state: str = WAITING
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    generated: int = 0
+    prefill_done: int = 0               # chunked-prefill progress
+    prompt_tokens: Optional[np.ndarray] = None   # engine path only
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_len + self.output_len
+
+    def weighted_tokens(self, out_weight: float = 4.0,
+                        predicted: bool = False) -> float:
+        """VTC/Equinox service measure: in + w·out tokens."""
+        out = (self.pred_output_len if predicted and
+               self.pred_output_len is not None else self.output_len)
+        return self.prompt_len + out_weight * out
+
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def e2e_latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival

@@ -1,0 +1,283 @@
+"""Scheduling policies behind one protocol: FCFS, RPM, VTC, Equinox.
+
+Protocol (driven by the simulator and the serving engine):
+    on_arrival(req, now)      request entered the queue
+    pop_next(now)             next request to admit, or None  (work-conserving)
+    on_admit(req, now)        request entered the GPU batch (counters update
+                              here — Algorithm 1 ``updateCounter``)
+    on_token(req, now, n)     n output tokens produced (incremental service)
+    on_complete(req, now, *, latency, tps, util)
+                              request finished; feeds actual metrics back
+                              (Algorithm 1 line 20 closes the loop)
+
+Service accounting (for fairness metrics) is uniform across policies:
+weighted tokens, input counted at admit, output counted as generated.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import counters as C
+from repro.core.request import Request
+
+
+class SchedulerBase:
+    name = "base"
+
+    def __init__(self):
+        self.queues: Dict[str, collections.deque] = collections.defaultdict(
+            collections.deque)
+        self.service: Dict[str, float] = collections.defaultdict(float)
+        self.arrived_clients = []
+
+    # -- queue plumbing ------------------------------------------------------
+    def on_arrival(self, req: Request, now: float):
+        if req.client not in self.queues or (req.client not in
+                                             self.arrived_clients):
+            self.arrived_clients.append(req.client)
+            self._on_new_client(req.client)
+        self.queues[req.client].append(req)
+
+    def _on_new_client(self, client: str):
+        pass
+
+    def has_waiting(self) -> bool:
+        return any(self.queues[c] for c in self.queues)
+
+    def queued_clients(self):
+        return [c for c, q in self.queues.items() if q]
+
+    # -- service accounting ----------------------------------------------------
+    def on_admit(self, req: Request, now: float):
+        self.service[req.client] += req.weight * req.prompt_len
+
+    def on_token(self, req: Request, now: float, n: int = 1):
+        self.service[req.client] += req.weight * C.OUT_TOKEN_WEIGHT * n
+
+    def on_complete(self, req: Request, now: float, *, latency: float,
+                    tps: float, util: float):
+        pass
+
+    def pop_next(self, now: float) -> Optional[Request]:
+        raise NotImplementedError
+
+    # -- introspection -----------------------------------------------------------
+    def fairness_scores(self) -> Dict[str, float]:
+        """Per-client scores for Jain's index (HF where defined, else
+        accumulated weighted service)."""
+        return dict(self.service)
+
+
+class FCFS(SchedulerBase):
+    """Strict arrival order — no client isolation (production default)."""
+    name = "fcfs"
+
+    def pop_next(self, now):
+        best, best_c = None, None
+        for c, q in self.queues.items():
+            if q and (best is None or q[0].arrival < best.arrival):
+                best, best_c = q[0], c
+        if best is not None:
+            self.queues[best_c].popleft()
+        return best
+
+
+class RPM(SchedulerBase):
+    """Static requests-per-minute quota + FCFS inside the allowance.
+    Wastes capacity off-peak (the paper's §1 critique) — kept as the
+    production-baseline reference."""
+    name = "rpm"
+
+    def __init__(self, quota_per_min: float = 60.0):
+        super().__init__()
+        self.quota = quota_per_min
+        self.windows: Dict[str, collections.deque] = collections.defaultdict(
+            collections.deque)
+
+    def _allowed(self, client: str, now: float) -> bool:
+        w = self.windows[client]
+        while w and w[0] <= now - 60.0:
+            w.popleft()
+        return len(w) < self.quota
+
+    def pop_next(self, now):
+        best, best_c = None, None
+        for c, q in self.queues.items():
+            if q and self._allowed(c, now):
+                if best is None or q[0].arrival < best.arrival:
+                    best, best_c = q[0], c
+        if best is not None:
+            self.queues[best_c].popleft()
+            self.windows[best_c].append(now)
+        return best
+
+
+class VTC(SchedulerBase):
+    """Virtual Token Counter [Sheng et al., OSDI'24].
+
+    Counter = accumulated weighted tokens; admit from the client with the
+    smallest counter; counter lifted to the active minimum when an idle
+    client returns (the VTC no-gaming lift).  ``predictor`` is optional:
+    plain VTC charges output tokens as they are generated; VTC+predictor
+    (Table 1 ablations) charges predicted output up front and reconciles
+    on completion.
+    """
+    name = "vtc"
+
+    def __init__(self, predictor=None, out_weight: float = C.OUT_TOKEN_WEIGHT):
+        super().__init__()
+        self.counter: Dict[str, float] = {}
+        self.predictor = predictor
+        self.w = out_weight
+
+    def _on_new_client(self, client):
+        active_min = min(self.counter.values()) if self.counter else 0.0
+        self.counter[client] = max(self.counter.get(client, 0.0), active_min)
+
+    def pop_next(self, now):
+        cands = self.queued_clients()
+        if not cands:
+            return None
+        c = min(cands, key=lambda c: self.counter[c])
+        return self.queues[c].popleft()
+
+    def on_admit(self, req, now):
+        super().on_admit(req, now)
+        self.counter[req.client] += req.weight * req.prompt_len
+        if self.predictor is not None:
+            self.predictor.predict(req)
+            self.counter[req.client] += (req.weight * self.w
+                                         * req.pred_output_len)
+
+    def on_token(self, req, now, n=1):
+        super().on_token(req, now, n)
+        if self.predictor is None:
+            self.counter[req.client] += req.weight * self.w * n
+
+    def on_complete(self, req, now, *, latency, tps, util):
+        if self.predictor is not None:
+            # reconcile predicted vs actual output tokens
+            err = req.output_len - (req.pred_output_len or 0.0)
+            self.counter[req.client] += req.weight * self.w * err
+            self.predictor.observe(req, latency=latency, tps=tps, util=util)
+
+    def fairness_scores(self):
+        return dict(self.counter)
+
+
+class Equinox(SchedulerBase):
+    """Holistic fair scheduling (paper Algorithm 1).
+
+    Keeps per-client UFC and RFC; admits from the argmin-HF client.  The
+    predictor supplies (T_out, latency, TPS, util) pre-execution; actual
+    metrics recalibrate ``P.map`` on completion.
+    """
+    name = "equinox"
+
+    def __init__(self, predictor, params: C.HFParams = C.HFParams()):
+        super().__init__()
+        self.p = params
+        self.predictor = predictor
+        self.ufc: Dict[str, float] = {}
+        self.rfc: Dict[str, float] = {}
+        self._lat_ema: float = 0.0            # running mean of wait+predict
+
+    def _norm_latency(self, lat: float) -> float:
+        """Scale-free latency term (HFParams.wait_norm, DESIGN.md §8)."""
+        if self.p.wait_norm != "relative":
+            return lat
+        self._lat_ema = (0.98 * self._lat_ema + 0.02 * lat
+                         if self._lat_ema else lat)
+        return min(lat / max(self._lat_ema, 1e-9), self.p.tilt_cap)
+
+    def _on_new_client(self, client):
+        for tbl in (self.ufc, self.rfc):
+            lift = min(tbl.values()) if tbl else 0.0
+            tbl[client] = max(tbl.get(client, 0.0), lift)
+
+    def _hf(self):
+        clients = list(self.ufc)
+        ufc = np.array([self.ufc[c] for c in clients])
+        rfc = np.array([self.rfc[c] for c in clients])
+        hf = C.hf_scores(ufc, rfc, self.p.alpha, self.p.beta)
+        return dict(zip(clients, hf))
+
+    def pop_next(self, now):
+        cands = self.queued_clients()
+        if not cands:
+            return None
+        hf = self._hf()
+        c = min(cands, key=lambda c: hf[c])
+        req = self.queues[c][0]
+        if req.pred_output_len is None:
+            self.predictor.predict(req)       # Algorithm 1 lines 4-5
+        return self.queues[c].popleft()
+
+    def on_admit(self, req, now):
+        super().on_admit(req, now)
+        if req.pred_output_len is None:
+            self.predictor.predict(req)
+        wait = max(now - req.arrival, 0.0)
+        lat = self._norm_latency(wait + (req.pred_latency or 0.0))
+        tilt = 1.0 + self.p.delta * lat       # UFC denominator (§3.1)
+        rfc_inc = C.rfc_increment(req.pred_tps or 0.0, req.pred_util or 0.0,
+                                  req.weight)
+        self.rfc[req.client] = self.rfc.get(req.client, 0.0) + rfc_inc
+        req._rfc_charged = rfc_inc
+        req._admit_wait = wait
+        req._tilt = tilt
+        self.ufc.setdefault(req.client, 0.0)
+        if self.p.charging == "upfront":
+            ufc_inc = (req.weight * (req.prompt_len + C.OUT_TOKEN_WEIGHT
+                                     * req.pred_output_len) / tilt)
+            self.ufc[req.client] += ufc_inc
+            req._ufc_charged = ufc_inc
+        else:
+            # incremental: charge the prompt now, outputs as produced
+            inc = req.weight * req.prompt_len / tilt
+            self.ufc[req.client] += inc
+            req._ufc_charged = inc
+
+    def on_token(self, req, now, n=1):
+        super().on_token(req, now, n)
+        if self.p.charging == "incremental":
+            inc = (req.weight * C.OUT_TOKEN_WEIGHT * n
+                   / getattr(req, "_tilt", 1.0))
+            self.ufc[req.client] += inc
+            req._ufc_charged = getattr(req, "_ufc_charged", 0.0) + inc
+
+    def on_complete(self, req, now, *, latency, tps, util):
+        """Algorithm 1 line 20: refresh HF_c with *actual* metrics — replace
+        the prediction-based increments with observed ones, recalibrate
+        P.map."""
+        if self.p.charging == "upfront":
+            lat = self._norm_latency(getattr(req, "_admit_wait", 0.0)
+                                     + latency)
+            actual = C.ufc_increment(req.prompt_len, req.generated, lat, 0.0,
+                                     req.weight, self.p.delta)
+            self.ufc[req.client] += actual - getattr(req, "_ufc_charged",
+                                                     actual)
+        actual_rfc = C.rfc_increment(tps, util, req.weight)
+        self.rfc[req.client] += actual_rfc - getattr(req, "_rfc_charged",
+                                                     actual_rfc)
+        self.predictor.observe(req, latency=latency, tps=tps, util=util)
+
+    def fairness_scores(self):
+        return self._hf()
+
+
+def make_scheduler(name: str, predictor=None, **kw):
+    name = name.lower()
+    if name == "fcfs":
+        return FCFS()
+    if name == "rpm":
+        return RPM(**kw)
+    if name == "vtc":
+        return VTC(predictor=predictor, **kw)
+    if name == "equinox":
+        assert predictor is not None, "Equinox requires a predictor"
+        return Equinox(predictor, **kw)
+    raise ValueError(name)

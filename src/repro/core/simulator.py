@@ -1,0 +1,249 @@
+"""Discrete-event continuous-batching serving simulator.
+
+Reproduces the paper's evaluation figures deterministically on CPU: the
+engine loop (admission → chunked prefill → batched decode → completion)
+is the same structure as ``repro.serving.engine``; iteration *timing*
+comes from the analytic roofline cost model instead of wall clock, so
+latency/throughput/utilization numbers reflect the target accelerator
+rather than this container.
+
+Serving mechanics modeled:
+- continuous batching with per-iteration admission (work-conserving);
+- chunked prefill (stall-free: running decodes never pause for a long
+  prompt — Sarathi-style prefill budget per iteration);
+- ``canSchedule`` (Algorithm 1): batch-size cap L_b + KV-memory budget M,
+  with predicted-output KV reservation when a predictor is attached;
+- adaptive batching: admission stops once the projected iteration time
+  exceeds the target (keeps TTFT bounded under bursts);
+- per-batch refresh overhead (host-bound gap — the Figure 2c mechanism).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.request import (DECODING, FINISHED, PREFILLING, Request,
+                                WAITING)
+from repro.core.schedulers import SchedulerBase
+from repro.serving.costmodel import CostModel
+
+
+@dataclasses.dataclass
+class SimConfig:
+    max_batch: int = 32               # L_b
+    kv_budget_tokens: Optional[int] = None   # M (None -> from cost model)
+    prefill_chunk: int = 512          # chunked-prefill budget per iteration
+    stall_free: bool = True
+    adaptive_batching: bool = True
+    target_iter_time: float = 0.25    # s; adaptive-batching admission cap
+    default_reserve: int = 256        # KV reservation w/o predictor
+    max_time: float = 1e9
+
+
+@dataclasses.dataclass
+class Timeline:
+    t: List[float] = dataclasses.field(default_factory=list)
+    util: List[float] = dataclasses.field(default_factory=list)
+    batch: List[int] = dataclasses.field(default_factory=list)
+    tokens: List[float] = dataclasses.field(default_factory=list)
+    service: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    timeline: Timeline
+    scheduler: SchedulerBase
+    sim_time: float
+
+    # -- metrics ---------------------------------------------------------------
+    def by_client(self):
+        out: Dict[str, List[Request]] = {}
+        for r in self.requests:
+            out.setdefault(r.client, []).append(r)
+        return out
+
+    def throughput_tokens_per_s(self) -> float:
+        tot = sum(r.prompt_len + r.generated for r in self.requests
+                  if r.state == FINISHED)
+        return tot / max(self.sim_time, 1e-9)
+
+    def service_rate_series(self, window: float = 2.0):
+        """Per-client weighted-token service rate over time."""
+        tl = self.timeline
+        ts = np.array(tl.t)
+        clients = sorted({c for s in tl.service for c in s})
+        out = {}
+        for c in clients:
+            cum = np.array([s.get(c, 0.0) for s in tl.service])
+            rate = np.gradient(cum, ts, edge_order=1) if len(ts) > 2 \
+                else np.zeros_like(cum)
+            out[c] = (ts, cum, rate)
+        return out
+
+    def service_difference(self, c1: str, c2: str):
+        """|accumulated weighted service| gap over time (both-backlogged
+        windows are where fairness is defined — matches VTC's metric)."""
+        tl = self.timeline
+        s1 = np.array([s.get(c1, 0.0) for s in tl.service])
+        s2 = np.array([s.get(c2, 0.0) for s in tl.service])
+        return np.array(tl.t), np.abs(s1 - s2)
+
+    def ttfts(self, client=None):
+        return np.array([r.ttft() for r in self.requests
+                         if r.ttft() is not None
+                         and (client is None or r.client == client)])
+
+    def latencies(self, client=None):
+        return np.array([r.e2e_latency() for r in self.requests
+                         if r.e2e_latency() is not None
+                         and (client is None or r.client == client)])
+
+    def mean_util(self) -> float:
+        tl = self.timeline
+        if not tl.t:
+            return 0.0
+        ts = np.array(tl.t)
+        dt = np.diff(ts, prepend=0.0)
+        return float(np.sum(np.array(tl.util) * dt) / max(ts[-1], 1e-9))
+
+    def jain_index(self) -> float:
+        xs = np.array(list(self.scheduler.fairness_scores().values()))
+        xs = xs[xs > 0]
+        if len(xs) == 0:
+            return 1.0
+        return float(xs.sum() ** 2 / (len(xs) * np.sum(xs ** 2)))
+
+
+class Simulator:
+    def __init__(self, cost_model: CostModel, scheduler: SchedulerBase,
+                 sim_cfg: SimConfig = SimConfig(), observer=None):
+        self.cm = cost_model
+        self.sched = scheduler
+        self.cfg = sim_cfg
+        self.observer = observer
+        self.kv_budget = (sim_cfg.kv_budget_tokens
+                          or cost_model.kv_budget_tokens())
+
+    def _reserve(self, req: Request) -> int:
+        pred = req.pred_output_len
+        return req.prompt_len + int(pred if pred is not None
+                                    else self.cfg.default_reserve)
+
+    def run(self, requests: List[Request], max_time: float = None) -> SimResult:
+        cfg = self.cfg
+        max_time = max_time or cfg.max_time
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pi = 0
+        t = 0.0
+        running: List[Request] = []
+        kv_used = 0
+        reserved: Dict[int, int] = {}
+        tl = Timeline()
+        finished = 0
+        n_total = len(pending)
+
+        while finished < n_total and t < max_time:
+            # 1. arrivals up to now
+            while pi < n_total and pending[pi].arrival <= t:
+                self.sched.on_arrival(pending[pi], t)
+                pi += 1
+            # idle jump
+            if not running and not self.sched.has_waiting():
+                if pi >= n_total:
+                    break
+                t = pending[pi].arrival
+                continue
+
+            # 2. admission (Algorithm 1 inner loop)
+            admitted_now = []
+            while len(running) < cfg.max_batch:
+                req = self.sched.pop_next(t)
+                if req is None:
+                    break
+                need = self._reserve(req)
+                if kv_used + need > self.kv_budget and running:
+                    # canSchedule failed -> requeue at head, stop admitting
+                    self.sched.queues[req.client].appendleft(req)
+                    break
+                if cfg.adaptive_batching and running:
+                    proj = self.cm.prefill_time(
+                        min(req.prompt_len, cfg.prefill_chunk))
+                    if proj > cfg.target_iter_time:
+                        self.sched.queues[req.client].appendleft(req)
+                        break
+                kv_used += need
+                reserved[req.rid] = need
+                req.state = PREFILLING
+                req.admit_time = t
+                req.prefill_done = 0
+                self.sched.on_admit(req, t)
+                if self.observer is not None:
+                    self.observer.on_admit(req, t)
+                running.append(req)
+                admitted_now.append(req)
+
+            # 3. one continuous-batching iteration
+            prefill_budget = cfg.prefill_chunk if cfg.stall_free else 1 << 30
+            prefill_tokens = 0
+            for r in running:
+                if r.state == PREFILLING and prefill_budget > 0:
+                    chunk = min(r.prompt_len - r.prefill_done, prefill_budget)
+                    r.prefill_done += chunk
+                    prefill_budget -= chunk
+                    prefill_tokens += chunk
+            decoding = [r for r in running if r.state == DECODING]
+            ctxs = [r.prompt_len + r.generated for r in decoding]
+            t_comp = (self.cm.prefill_time(prefill_tokens)
+                      if prefill_tokens else 0.0) \
+                + self.cm.decode_step_time(ctxs)
+            overhead = self.cm.hw.batch_overhead if (admitted_now or
+                                                     not running) else 0.0
+            t_iter = max(t_comp + overhead, 1e-6)
+            t += t_iter
+
+            # 4. token production
+            done_now = []
+            for r in running:
+                if r.state == PREFILLING and r.prefill_done >= r.prompt_len:
+                    r.state = DECODING
+                    r.generated = 1              # prefill emits first token
+                    r.first_token_time = t
+                    self.sched.on_token(r, t, 1)
+                elif r.state == DECODING:
+                    r.generated += 1
+                    self.sched.on_token(r, t, 1)
+                if r.state == DECODING and r.generated >= r.output_len:
+                    r.state = FINISHED
+                    r.finish_time = t
+                    done_now.append(r)
+
+            # 5. completions -> feedback loop
+            iter_tokens = prefill_tokens + len(decoding)
+            util = (1.0 - overhead / t_iter) * min(
+                len(running) / max(cfg.max_batch * 0.25, 1), 1.0)
+            for r in done_now:
+                running.remove(r)
+                kv_used -= reserved.pop(r.rid)
+                finished += 1
+                # TPS is GPU execution throughput (§3.2: "tokens per second
+                # in GPU"), not user-perceived — exclude queue wait.
+                exec_lat = max(t - (r.admit_time or t), 1e-9)
+                tps = (r.prompt_len + r.generated) / exec_lat
+                self.sched.on_complete(r, t, latency=exec_lat, tps=tps,
+                                       util=util)
+                if self.observer is not None:
+                    self.observer.on_complete(r, t, latency=exec_lat,
+                                              tps=tps, util=util)
+
+            # 6. timeline sample
+            tl.t.append(t)
+            tl.util.append(util)
+            tl.batch.append(len(running) + len(done_now))
+            tl.tokens.append(iter_tokens)
+            tl.service.append(dict(self.sched.service))
+
+        return SimResult(requests=pending, timeline=tl, scheduler=self.sched,
+                         sim_time=t)

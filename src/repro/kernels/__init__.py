@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the serving hot-spots (flash prefill attention,
+paged decode attention, Mamba-2 SSD scan).  Each kernel has a pure-jnp
+oracle in ``ref.py`` and a jit'd wrapper in ``ops.py``; on CPU they run
+in interpret mode."""
+from repro.kernels.ops import flash_attention, paged_attention, ssd_scan
+
+__all__ = ["flash_attention", "paged_attention", "ssd_scan"]

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (prefill hot-spot).
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks) — the kv dimension is the
+innermost (sequential) axis, so the (m, l, acc) running statistics live in
+VMEM scratch across kv iterations of one q block.  BlockSpecs stream
+(block_q × head_dim) / (block_kv × head_dim) tiles HBM→VMEM; head_dim is
+kept whole (128-lane aligned for the MXU).  GQA maps query head h to KV
+head h // group_size in the kv index maps.
+
+Causal / sliding-window masks are applied per tile from position iota;
+fully-masked tiles still execute (masked to -inf) — the block-pair
+skipping that the pure-JAX ``repro.models.attention.flash_attention``
+does statically is a compile-time-only concern on CPU, while on TPU the
+same effect would come from a custom grid index map (left as the
+documented follow-up in EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q, block_kv, n_kv, causal, window, sm_scale, kv_len):
+    iq = pl.program_id(2)
+    jkv = pl.program_id(3)
+
+    @pl.when(jkv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (block_q, d)
+    k = k_ref[...].astype(jnp.float32)            # (block_kv, d)
+    v = v_ref[...].astype(jnp.float32)            # (block_kv, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+    kpos = jkv * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_kv), 1)
+    mask = kpos < kv_len                           # kv padding
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jkv == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0,
+                           block_q=128, block_kv=128, interpret=False):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D[v]).  Sq==Skv (prefill)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    pq, pkv = (-Sq) % block_q, (-Skv) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    n_q = (Sq + pq) // block_q
+    n_kv = (Skv + pkv) // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_kv=block_kv, n_kv=n_kv,
+        causal=causal, window=window, sm_scale=D ** -0.5, kv_len=Skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, None, D),
+                         lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((None, block_kv, None, D),
+                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+            pl.BlockSpec((None, block_kv, None, Dv),
+                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, None, Dv),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq + pq, Hq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,41 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` — the
+kernel body executes with real block/grid semantics so correctness of the
+BlockSpec tiling is what's validated; on TPU the same call lowers through
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_kv=128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_kv=block_kv,
+                                  interpret=_interpret())
+
+
+@jax.jit
+def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens):
+    return paged_attention_pallas(q, k_pool, v_pool, block_tables, ctx_lens,
+                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, la, Bm, Cm, *, chunk=128):
+    return ssd_scan_pallas(x, la, Bm, Cm, chunk=chunk,
+                           interpret=_interpret())

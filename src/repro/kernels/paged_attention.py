@@ -1,0 +1,101 @@
+"""Pallas TPU paged decode attention — the serving engine's hot-spot.
+
+TPU adaptation of vLLM's PagedAttention (DESIGN.md §3): the per-request
+block table is *scalar-prefetched* so the kv-pool BlockSpec index maps
+can chase the indirection while the previous tile is still streaming
+HBM→VMEM.  Pool blocks are (page_size × head_dim) VMEM tiles; one grid
+program handles one (request, kv head, page) step with the page axis
+innermost, carrying flash-style (m, l, acc) statistics for the G query
+heads of the group in VMEM scratch.
+
+Inputs:
+    q            (B, Hq, D)       one decode token per request
+    k_pool/v_pool(P, page, Hkv, D) global paged KV pools
+    block_tables (B, n_pages)     int32 pool-page ids per request (0-padded)
+    ctx_lens     (B,)             int32 valid context length per request
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page, n_pages, sm_scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (G, D)
+    k = k_ref[...].astype(jnp.float32)            # (page, D)
+    v = v_ref[...].astype(jnp.float32)            # (page, Dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    ctx = ctx_ref[b]
+    tokpos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(tokpos < ctx, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, block_tables, ctx_lens, *,
+                           interpret=False):
+    """Returns (B, Hq, Dv)."""
+    B, Hq, D = q.shape
+    n_pool, page, Hkv, _ = k_pool.shape
+    Dv = v_pool.shape[-1]
+    G = Hq // Hkv
+    n_pages = block_tables.shape[1]
+
+    kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages,
+                               sm_scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block_tables, ctx_lens
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((None, None, G, D),
+                         lambda b, h, j, tables, ctx: (b, h, 0, 0)),
+            pl.BlockSpec((None, page, None, D),
+                         lambda b, h, j, tables, ctx: (tables[b, j], 0, h, 0)),
+            pl.BlockSpec((None, page, None, Dv),
+                         lambda b, h, j, tables, ctx: (tables[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, Dv),
+                               lambda b, h, j, tables, ctx: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dv), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    qg = q.reshape(B, Hkv, G, D)                  # group query heads
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, ctx_lens, qg, k_pool, v_pool)
+    return out.reshape(B, Hq, Dv)

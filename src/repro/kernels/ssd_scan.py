@@ -1,0 +1,111 @@
+"""Pallas TPU chunked SSD scan (Mamba-2 prefill hot-spot).
+
+TPU adaptation of the SSD algorithm [arXiv:2405.21060]: instead of the
+GPU warp-level scan, chunks map to MXU-shaped tiles — the intra-chunk
+dual form is two (chunk × chunk) matmuls, and the inter-chunk recurrence
+carries the (head_dim × d_state) state in VMEM scratch across the
+innermost (sequential) chunk axis of the grid.
+
+Grid: (batch, heads, n_chunks).  Per-head tiles:
+    x   (chunk, P)      la (chunk, 1)     B/C (chunk, N)
+    state scratch (P, N) f32, persists across the chunk axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk, n_chunks):
+    cidx = pl.program_id(2)
+
+    @pl.when(cidx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (Q, P)
+    la = la_ref[...].astype(jnp.float32)[:, 0]    # (Q,)
+    B = b_ref[...].astype(jnp.float32)            # (Q, N)
+    C = c_ref[...].astype(jnp.float32)            # (Q, N)
+
+    la_cum = jnp.cumsum(la)                       # (Q,)
+    la_tot = la_cum[-1]
+
+    # intra-chunk dual form: masked decay "attention"
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    decay = la_cum[:, None] - la_cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(decay), 0.0)
+    y_intra = jax.lax.dot_general(scores * L, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state
+    state = state_ref[...]                        # (P, N)
+    y_inter = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(la_cum)[:, None]
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S <- exp(la_tot) S + sum_j exp(la_tot - la_cum_j) x_j B_j^T
+    w = jnp.exp(la_tot - la_cum)[:, None]         # (Q, 1)
+    upd = jax.lax.dot_general(x * w, B, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(la_tot) * state + upd
+
+    @pl.when(cidx == n_chunks - 1)
+    def _finish():
+        state_out_ref[...] = state_ref[...]
+
+
+def ssd_scan_pallas(x, la, Bm, Cm, *, chunk=128, interpret=False):
+    """x: (B, S, H, P); la: (B, S, H); Bm/Cm: (B, S, G, N).
+    Returns (y (B, S, H, P), final_state (B, H, P, N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))    # exp(0)=1, x=0: no-op
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    n_chunks = Sp // chunk
+    la3 = la[..., None]                           # (B, Sp, H, 1)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, chunk, None, P),
+                         lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None, 1),
+                         lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None, N),
+                         lambda b, h, c, rep=rep: (b, c, h // rep, 0)),
+            pl.BlockSpec((None, chunk, None, N),
+                         lambda b, h, c, rep=rep: (b, c, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, None, P),
+                         lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, None, P, N),
+                         lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Sp, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, la3, Bm, Cm)
+    return y[:, :S], state

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-256 single pod (16×16) or 2 pods (2×16×16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (tests / examples)."""
+    n = jax.device_count()
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

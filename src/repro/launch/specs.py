@@ -1,0 +1,154 @@
+"""ShapeDtypeStruct input specs + sharded step functions for the dry-run.
+
+``input_specs(cfg, shape)`` returns stand-ins for every model input —
+weak-type-correct, shardable, no device allocation.  Modality frontends
+are stubbed per the assignment: audio contributes precomputed frame
+embeddings, VLM contributes projected patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models import (batch_specs, cache_specs, init_cache, init_params,
+                          long_context_variant, loss_fn, param_specs, prefill)
+from repro.models.model import decode_step
+from repro.training.optim import AdamW
+
+
+def shape_cfg(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+def config_for(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k lowers the sliding-window variant on full-attention archs
+    (DESIGN.md §4)."""
+    if shape.name == "long_500k":
+        return long_context_variant(cfg)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns (batch_tree_of_ShapeDtypeStructs, aux) for the shape's mode.
+
+    train:   {tokens, labels [, frames | patch_embeds]}
+    prefill: {tokens [, frames | patch_embeds]}
+    decode:  tokens (B,) int32  (cache specs come from ``decode_cache``)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    nf = cfg.n_frontend_tokens
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if shape.mode == "decode":
+        return tok((B,)), None
+    batch = {}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.ShapeDtypeStruct((B, nf, d), dt)
+        batch["tokens"] = tok((B, S))
+        if shape.mode == "train":
+            batch["labels"] = tok((B, S))
+    elif cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct((B, nf, d), dt)
+        batch["tokens"] = tok((B, S - nf))
+        if shape.mode == "train":
+            batch["labels"] = tok((B, S - nf))
+    else:
+        batch["tokens"] = tok((B, S))
+        if shape.mode == "train":
+            batch["labels"] = tok((B, S))
+    return batch, None
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((), jnp.uint32))
+
+
+def _key_struct():
+    return jax.random.key(0)
+
+
+def param_structs_concrete(cfg: ModelConfig):
+    """eval_shape over init with a real key avoids custom-key-dtype issues."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def decode_cache_structs(cfg: ModelConfig, shape: ShapeConfig):
+    enc_len = cfg.n_frontend_tokens if cfg.is_encoder_decoder else 0
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           enc_len=enc_len, pos=shape.seq_len - 1))
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, example_args (ShapeDtypeStructs), in_shardings,
+    donate_argnums)."""
+    cfg = config_for(cfg, shape)
+    params = param_structs_concrete(cfg)
+    pspecs = param_specs(params, cfg, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    B = shape.global_batch
+
+    if shape.mode == "train":
+        import dataclasses as _dc
+        opt = AdamW(lr=1e-4, weight_decay=0.01, grad_clip=1.0)
+        opt_state = jax.eval_shape(opt.init, params)
+        # ZeRO-1: the f32 Adam moments always shard over the data axis
+        # (they are only touched once per step — gather cost is trivial,
+        # memory win is 8 bytes/param/data-size)
+        zspecs = param_specs(params, _dc.replace(cfg, fsdp=True), mesh)
+        ospecs = {"mu": zspecs, "nu": zspecs, "step": P()}
+        osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        batch, _ = input_specs(cfg, shape)
+        # training spreads the batch over every mesh axis (ZeRO-style —
+        # weights gather at use), minimising per-device activation tokens;
+        # channel-parallel recurrent stacks (RG-LRU) keep batch over data
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           batch_specs(batch, mesh, B,
+                                       include_model=cfg.
+                                       train_batch_over_model),
+                           is_leaf=lambda x: isinstance(x, P))
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg))(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        # donate params/opt_state — in-place update on device
+        return train_step, (params, opt_state, batch), (psh, osh, bsh), (0, 1)
+
+    if shape.mode == "prefill":
+        batch, _ = input_specs(cfg, shape)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           batch_specs(batch, mesh, B),
+                           is_leaf=lambda x: isinstance(x, P))
+
+        def prefill_step(params, batch):
+            return prefill(params, batch, cfg, max_len=shape.seq_len)
+
+        return prefill_step, (params, batch), (psh, bsh), ()
+
+    # decode
+    tokens, _ = input_specs(cfg, shape)
+    cache = decode_cache_structs(cfg, shape)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       cache_specs(cache, cfg, mesh, B),
+                       is_leaf=lambda x: isinstance(x, P))
+    tsh = NamedSharding(mesh, jax.tree.map(
+        lambda s: s, batch_specs(tokens, mesh, B)))
+
+    def serve_step(params, tokens, cache):
+        return decode_step(params, tokens, cache, cfg)
+
+    # donate the KV cache — decode updates it in place
+    return serve_step, (params, tokens, cache), (psh, tsh, csh), (2,)

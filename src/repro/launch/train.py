@@ -1,0 +1,47 @@
+"""Training launcher.
+
+Local (this container): reduced configs on the host devices —
+    PYTHONPATH=src python -m repro.launch.train --arch llama2-7b --smoke \
+        --steps 200 --batch 8 --seq 256
+Production: full configs on the v5e mesh (same code path; the mesh comes
+from ``make_production_mesh`` when --production is passed on a host that
+actually has the slice).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import SMOKE_FACTORIES, get_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.training import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--production", action="store_true",
+                    help="16x16 v5e mesh (requires the hardware)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (SMOKE_FACTORIES[args.arch]() if args.smoke
+           else get_config(args.arch))
+    mesh = None
+    if args.production:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tc = TrainConfig(batch=args.batch, seq_len=args.seq, steps=args.steps,
+                     peak_lr=args.lr, ckpt_path=args.ckpt, seed=args.seed)
+    _, losses = train(cfg, tc, mesh=mesh)
+    print(f"final loss: {losses[-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,571 @@
+"""Attention: GQA (full / sliding-window), MLA, cross-attention.
+
+Two implementations share one math definition:
+
+- ``naive_attention`` — materialises scores; used by smoke tests & the
+  CPU serving engine (tiny models) and as the oracle for the Pallas
+  kernels.
+- ``flash_attention`` — pure-JAX blockwise attention (lax.scan over a
+  *static* list of (q-block, kv-block) pairs).  Causal/windowed variants
+  enumerate only the needed block pairs, so compiled FLOPs match the
+  true triangular/banded cost and peak memory is O(block²).  This is the
+  path large dry-run shapes lower through; the Pallas kernel in
+  ``repro/kernels`` is the TPU-target version of the same schedule.
+
+Decode-step attention (one token vs a cache) is a plain einsum — scores
+are (B, H, 1, S), never quadratic.  Sliding-window caches are circular
+buffers of ``window`` slots; keys are stored post-RoPE so ring order
+does not matter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA parameter init
+# ---------------------------------------------------------------------------
+def gqa_init(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads, head_dim), dtype, in_axis=0),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads, head_dim), dtype, in_axis=0),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads, head_dim), dtype, in_axis=0),
+        "wo": dense_init(ks[3], (n_heads, head_dim, d_model), dtype, in_axis=0),
+    }
+
+
+def _group_heads(q, n_kv):
+    """(B, S, Hq, D) -> (B, S, Hkv, G, D)."""
+    B, S, Hq, D = q.shape
+    return q.reshape(B, S, n_kv, Hq // n_kv, D)
+
+
+# ---------------------------------------------------------------------------
+# Reference (naive) attention
+# ---------------------------------------------------------------------------
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B,Sq,Hq,Dk) k: (B,Skv,Hkv,Dk) v: (B,Skv,Hkv,Dv)."""
+    B, Sq, Hq, Dk = q.shape
+    Hkv = k.shape[2]
+    qg = _group_heads(q, Hkv)
+    scale = Dk ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise flash attention (pure JAX, static block-pair enumeration)
+# ---------------------------------------------------------------------------
+def _block_pairs(n_q, n_kv, block_q, block_kv, causal, window):
+    """Static (i, j) pairs of blocks that contain any unmasked entry.
+
+    Computed on *positions* so unequal q/kv block sizes are handled:
+    q block i spans [i·bq, (i+1)·bq); kv block j spans [j·bkv, (j+1)·bkv).
+    """
+    pairs = []
+    for i in range(n_q):
+        q_lo, q_hi = i * block_q, (i + 1) * block_q - 1
+        for j in range(n_kv):
+            kv_lo, kv_hi = j * block_kv, (j + 1) * block_kv - 1
+            if causal and kv_lo > q_hi:
+                continue                      # entirely above the diagonal
+            if window and kv_hi <= q_lo - window:
+                continue                      # entirely outside the band
+            pairs.append((i, j))
+    return pairs
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=512, block_kv=512):
+    """Memory-efficient attention with a flash-style custom VJP.
+
+    Forward keeps only (out, logsumexp) as residuals; backward re-walks
+    the same static block-pair list accumulating dq/dk/dv — O(S·D) memory
+    in both directions, so a 32k-token training step never materialises
+    an S×S score tensor or per-step scan carries."""
+    return _flash_core(causal, window, min(block_q, q.shape[1]),
+                       min(block_kv, k.shape[1]), q, k, v)
+
+
+def _flash_fwd_impl(causal, window, block_q, block_kv, q, k, v):
+    """Returns (out, lse) with lse: (B, Sq, Hkv, G)."""
+    B, Sq, Hq, Dk = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    # pad to block multiples
+    pq = (-Sq) % block_q
+    pkv = (-Skv) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    Sq_p, Skv_p = Sq + pq, Skv + pkv
+    n_q, n_kv = Sq_p // block_q, Skv_p // block_kv
+    pairs = _block_pairs(n_q, n_kv, block_q, block_kv, causal, window)
+    pi = jnp.array([p[0] for p in pairs], jnp.int32)
+    pj = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    qg = _group_heads(q, Hkv)                    # (B, Sq, Hkv, G, D)
+    G = Hq // Hkv
+    scale = Dk ** -0.5
+    kpos_all = jnp.arange(Skv_p)
+    qpos_all = jnp.arange(Sq_p)
+
+    acc0 = jnp.zeros((n_q, B, block_q, Hkv, G, Dv), jnp.float32)
+    m0 = jnp.full((n_q, B, block_q, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n_q, B, block_q, Hkv, G), jnp.float32)
+
+    def body(carry, ij):
+        acc, m, l = carry
+        i, j = ij
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * block_q, block_q, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k, j * block_kv, block_kv, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * block_kv, block_kv, axis=1)
+        s = jnp.einsum("bskgd,btkd->bskgt", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, i * block_q, block_q)
+        kpos = jax.lax.dynamic_slice_in_dim(kpos_all, j * block_kv, block_kv)
+        mask = kpos[None, :] <= Skv - 1          # mask kv padding
+        mask = jnp.broadcast_to(mask, (block_q, block_kv))
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)              # (B, bq, Hkv, G)
+        m_cur = jax.lax.dynamic_index_in_dim(m, i, keepdims=False)
+        l_cur = jax.lax.dynamic_index_in_dim(l, i, keepdims=False)
+        acc_cur = jax.lax.dynamic_index_in_dim(acc, i, keepdims=False)
+        m_new = jnp.maximum(m_cur, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_cur - m_new)
+        l_new = l_cur * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgt,btkd->bskgd", p, vb.astype(jnp.float32))
+        acc_new = acc_cur * corr[..., None] + pv
+        acc = jax.lax.dynamic_update_index_in_dim(acc, acc_new, i, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (pi, pj))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]                     # (n_q, B, bq, Hkv, G, Dv)
+    lse = m + jnp.log(l)                         # (n_q, B, bq, Hkv, G)
+    out = out.swapaxes(0, 1).reshape(B, Sq_p, Hkv, G, Dv)
+    lse = lse.swapaxes(0, 1).reshape(B, Sq_p, Hkv, G)
+    return out[:, :Sq], lse[:, :Sq]
+
+
+def _flash_mask(causal, window, kv_len, qpos, kpos, block_q, block_kv):
+    mask = jnp.broadcast_to(kpos[None, :] <= kv_len - 1, (block_q, block_kv))
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash_core(causal, window, block_q, block_kv, q, k, v):
+    out, _ = _flash_fwd_impl(causal, window, block_q, block_kv, q, k, v)
+    B, Sq = q.shape[0], q.shape[1]
+    return out.reshape(B, Sq, q.shape[2], v.shape[-1]).astype(q.dtype)
+
+
+def _flash_core_fwd(causal, window, block_q, block_kv, q, k, v):
+    out, lse = _flash_fwd_impl(causal, window, block_q, block_kv, q, k, v)
+    B, Sq = q.shape[0], q.shape[1]
+    o = out.reshape(B, Sq, q.shape[2], v.shape[-1]).astype(q.dtype)
+    return o, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, window, block_q, block_kv, res, do):
+    """Flash backward: re-walk the static block-pair list, accumulating
+    dq/dk/dv in f32 buffers — no S×S tensor, no saved scan carries."""
+    q, k, v, out, lse = res
+    B, Sq, Hq, Dk = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    pq = (-Sq) % block_q
+    pkv = (-Skv) % block_kv
+    pad_q = lambda a: jnp.pad(a, ((0, 0), (0, pq)) + ((0, 0),) * (a.ndim - 2))
+    pad_kv = lambda a: jnp.pad(a, ((0, 0), (0, pkv)) + ((0, 0),) * (a.ndim - 2))
+    do_g = pad_q(do.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32))
+    qg = pad_q(_group_heads(q, Hkv))
+    out_p = pad_q(out)                           # already (B,Sq,Hkv,G,Dv) f32
+    lse_p = pad_q(lse)
+    kp = pad_kv(k)
+    vp = pad_kv(v)
+    Sq_p, Skv_p = Sq + pq, Skv + pkv
+    n_q, n_kv = Sq_p // block_q, Skv_p // block_kv
+    pairs = _block_pairs(n_q, n_kv, block_q, block_kv, causal, window)
+    pi = jnp.array([p[0] for p in pairs], jnp.int32)
+    pj = jnp.array([p[1] for p in pairs], jnp.int32)
+    scale = Dk ** -0.5
+    # delta[b,s,k,g] = sum_d do * out
+    delta = jnp.sum(do_g * out_p, axis=-1)
+    qpos_all = jnp.arange(Sq_p)
+    kpos_all = jnp.arange(Skv_p)
+
+    dq0 = jnp.zeros((B, Sq_p, Hkv, G, Dk), jnp.float32)
+    dk0 = jnp.zeros((B, Skv_p, Hkv, Dk), jnp.float32)
+    dv0 = jnp.zeros((B, Skv_p, Hkv, Dv), jnp.float32)
+
+    def body(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij
+        sl_q = lambda a: jax.lax.dynamic_slice_in_dim(a, i * block_q,
+                                                      block_q, axis=1)
+        sl_kv = lambda a: jax.lax.dynamic_slice_in_dim(a, j * block_kv,
+                                                       block_kv, axis=1)
+        qb, dob, lseb, deltab = sl_q(qg), sl_q(do_g), sl_q(lse_p), sl_q(delta)
+        kb, vb = sl_kv(kp), sl_kv(vp)
+        s = jnp.einsum("bskgd,btkd->bskgt", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, i * block_q, block_q)
+        kpos = jax.lax.dynamic_slice_in_dim(kpos_all, j * block_kv, block_kv)
+        mask = _flash_mask(causal, window, Skv, qpos, kpos, block_q, block_kv)
+        p = jnp.where(mask[None, :, None, None, :],
+                      jnp.exp(s - lseb[..., None]), 0.0)
+        dv_b = jnp.einsum("bskgt,bskgd->btkd", p, dob)
+        dp = jnp.einsum("bskgd,btkd->bskgt", dob, vb.astype(jnp.float32))
+        ds = p * (dp - deltab[..., None]) * scale
+        dq_b = jnp.einsum("bskgt,btkd->bskgd", ds, kb.astype(jnp.float32))
+        dk_b = jnp.einsum("bskgt,bskgd->btkd", ds, qb.astype(jnp.float32))
+        upd_q = jax.lax.dynamic_slice_in_dim(dq, i * block_q, block_q, 1)
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, upd_q + dq_b,
+                                                 i * block_q, 1)
+        upd_k = jax.lax.dynamic_slice_in_dim(dk, j * block_kv, block_kv, 1)
+        dk = jax.lax.dynamic_update_slice_in_dim(dk, upd_k + dk_b,
+                                                 j * block_kv, 1)
+        upd_v = jax.lax.dynamic_slice_in_dim(dv, j * block_kv, block_kv, 1)
+        dv = jax.lax.dynamic_update_slice_in_dim(dv, upd_v + dv_b,
+                                                 j * block_kv, 1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), (pi, pj))
+    dq = dq[:, :Sq].reshape(B, Sq, Hq, Dk).astype(q.dtype)
+    dk = dk[:, :Skv].astype(k.dtype)
+    dv = dv[:, :Skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def attention(q, k, v, *, causal=True, window=0, impl="flash"):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (prefill) and decode step
+# ---------------------------------------------------------------------------
+def gqa_prefill(params, x, positions, cfg, *, window=0, causal=True):
+    """Returns (out, (k_cache_entry, v_cache_entry))."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention(q, k, v, causal=causal, window=window, impl=cfg.attn_impl)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, (k, v)
+
+
+def gqa_decode(params, x, k_cache, v_cache, pos, cfg, *, window=0,
+               k_scale=None, v_scale=None):
+    """One-token decode.  x: (B, 1, d); caches: (B, S_cache, Hkv, D);
+    pos: (B,) int32 per-request positions (continuous batching).
+
+    Full attention: write at index ``pos[b]``; valid = idx <= pos[b].
+    Windowed: circular write at ``pos[b] %% S_cache``; valid = newest
+    ``window`` entries.  With ``cfg.kv_quant`` the caches are int8 with
+    per-(token, head) bf16 scales (k_scale/v_scale) — halves the decode
+    HBM term.
+    """
+    B, _, _ = x.shape
+    S_cache = k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    posv = pos[:, None]
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    slot = pos % S_cache if window else pos
+    quant = k_scale is not None
+    if quant:
+        kq, ks = quantize_kv(k[:, 0])
+        vq, vs = quantize_kv(v[:, 0])
+        k_cache = _cache_write(k_cache, kq, slot)
+        v_cache = _cache_write(v_cache, vq, slot)
+        k_scale = _scale_write(k_scale, ks, slot)
+        v_scale = _scale_write(v_scale, vs, slot)
+    else:
+        k_cache = _cache_write(k_cache, k[:, 0], slot)
+        v_cache = _cache_write(v_cache, v[:, 0], slot)
+    valid = _decode_valid(S_cache, pos, window)
+    out = decode_attention(q, k_cache, v_cache, valid,
+                           k_scale=k_scale, v_scale=v_scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if quant:
+        return y, (k_cache, v_cache, k_scale, v_scale)
+    return y, (k_cache, v_cache)
+
+
+def _scale_write(scales, s_new, slot):
+    """scales: (B, S, Hkv); s_new: (B, Hkv)."""
+    S = scales.shape[1]
+    mask = jnp.arange(S)[None, :] == slot[:, None]
+    return jnp.where(mask[..., None], s_new[:, None].astype(scales.dtype),
+                     scales)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (beyond-paper serving optimization, §Perf A3)
+# ---------------------------------------------------------------------------
+def quantize_kv(x):
+    """x: (..., D) bf16 -> (int8 values, per-(...,) bf16 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(dtype) * scale[..., None].astype(dtype))
+
+
+def _cache_write(cache, token, slot):
+    """Write one token per request at per-request slots.
+
+    Uses a masked select instead of a scatter: XLA:CPU promotes batched
+    scatters on bf16 stacks to f32 (a full-cache f32 temp per layer —
+    §Perf iteration A2); the select stays in bf16 on every backend and
+    lowers to a single fused pass on TPU."""
+    S = cache.shape[1]
+    mask = jnp.arange(S)[None, :] == slot[:, None]          # (B, S)
+    mask = mask.reshape(mask.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(mask, token[:, None].astype(cache.dtype), cache)
+
+
+def _decode_valid(S_cache, pos, window):
+    """(B, S_cache) validity mask for per-request positions."""
+    idx = jnp.arange(S_cache)[None, :]
+    if window:
+        return idx < jnp.minimum(pos[:, None] + 1, S_cache)
+    return idx <= pos[:, None]
+
+
+DECODE_BLOCK_THRESHOLD = 8192      # blockwise path for long caches
+
+
+def decode_attention(q, k_cache, v_cache, valid, k_scale=None, v_scale=None):
+    """q: (B,1,Hq,D); caches: (B,S,Hkv,D); valid: (B, S) bool.
+
+    The cache is NOT cast to f32 (that would materialise a full-cache f32
+    copy — prohibitive at 32k×128); matmuls accumulate in f32 via
+    ``preferred_element_type``.  Long caches additionally stream through
+    ``decode_attention_blocked`` so every per-op working set stays
+    block-sized (§Perf iteration A1: 20.7 GiB → block-bounded temps)."""
+    if k_cache.shape[1] >= DECODE_BLOCK_THRESHOLD or k_scale is not None:
+        return decode_attention_blocked(q, k_cache, v_cache, valid,
+                                        k_scale=k_scale, v_scale=v_scale)
+    Hkv = k_cache.shape[2]
+    qg = _group_heads(q, Hkv)                    # (B, 1, Hkv, G, D)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    B, S, _, Dv = v_cache.shape
+    return out.reshape(B, 1, -1, Dv).astype(q.dtype)
+
+
+def decode_attention_blocked(q, k_cache, v_cache, valid, block=2048,
+                             k_scale=None, v_scale=None):
+    """Flash-style streaming decode attention over cache blocks: running
+    (m, l, acc) statistics, O(block) working set regardless of context."""
+    B, S, Hkv, Dk = k_cache.shape
+    Dv = v_cache.shape[-1]
+    qg = _group_heads(q, Hkv)[:, 0]              # (B, Hkv, G, D)
+    G = qg.shape[2]
+    scale = Dk ** -0.5
+    pad = (-S) % block
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+    n = (S + pad) // block
+
+    acc0 = jnp.zeros((B, Hkv, G, Dv), jnp.float32)
+    m0 = jnp.full((B, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
+
+    def body(carry, i):
+        acc, m, l = carry
+        # dynamic slices — no transposed full-cache copy is materialised
+        kb = jax.lax.dynamic_slice_in_dim(k_cache, i * block, block, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v_cache, i * block, block, axis=1)
+        mb = jax.lax.dynamic_slice_in_dim(valid, i * block, block, axis=1)
+        if k_scale is not None:
+            ksb = jax.lax.dynamic_slice_in_dim(k_scale, i * block, block, 1)
+            vsb = jax.lax.dynamic_slice_in_dim(v_scale, i * block, block, 1)
+            kb = dequantize_kv(kb, ksb, qg.dtype)
+            vb = dequantize_kv(vb, vsb, qg.dtype)
+        s = jnp.einsum("bkgd,btkd->bkgt", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mb[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgt,btkd->bkgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    (acc, _, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  jnp.arange(n, dtype=jnp.int32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, Hkv * G, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_init(key, d_model, n_heads, head_dim, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads, head_dim), dtype, in_axis=0),
+        "wk": dense_init(ks[1], (d_model, n_heads, head_dim), dtype, in_axis=0),
+        "wv": dense_init(ks[2], (d_model, n_heads, head_dim), dtype, in_axis=0),
+        "wo": dense_init(ks[3], (n_heads, head_dim, d_model), dtype, in_axis=0),
+    }
+
+
+def cross_kv(params, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, params["wv"])
+    return k, v
+
+
+def cross_attn(params, x, enc_k, enc_v, impl="flash"):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    out = attention(q, enc_k, enc_v, causal=False, impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — MiniCPM3 / DeepSeek-V2 style
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype, in_axis=0),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dtype)},
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H, qk_hd), dtype, in_axis=0),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            dtype, in_axis=0),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dtype)},
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank, H,
+                                    m.qk_nope_head_dim + m.v_head_dim),
+                            dtype, in_axis=0),
+        "wo": dense_init(ks[4], (H, m.v_head_dim, d), dtype, in_axis=0),
+    }
+
+
+def _mla_qkv(params, x, positions, cfg):
+    from repro.models.layers import rmsnorm
+    m = cfg.mla
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["wq_a"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c = rmsnorm(params["kv_norm"], ckv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = apply_rope(ckv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)[:, :, 0]   # shared across heads
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_prefill(params, x, positions, cfg, *, window=0):
+    """Expanded (non-absorbed) MLA for prefill.  Cache = (c, k_rope)."""
+    m = cfg.mla
+    q_nope, q_rope, c, k_rope = _mla_qkv(params, x, positions, cfg)
+    kv = jnp.einsum("bsr,rhk->bshk", c, params["wkv_b"])
+    k_nope = kv[..., :m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = attention(q, k, v, causal=True, window=window, impl=cfg.attn_impl)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (c, k_rope)
+
+
+def mla_decode(params, x, c_cache, krope_cache, pos, cfg, *, window=0):
+    """Absorbed MLA decode: attend in latent space (the MLA serving trick).
+
+    c_cache: (B, S, r); krope_cache: (B, S, rope_dim); pos: (B,) int32.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    S_cache = c_cache.shape[1]
+    q_nope, q_rope, c_new, krope_new = _mla_qkv(params, x, pos[:, None], cfg)
+    slot = pos % S_cache if window else pos
+    c_cache = _cache_write(c_cache, c_new[:, 0], slot)
+    krope_cache = _cache_write(krope_cache, krope_new[:, 0], slot)
+    # absorb W_UK into the query:  q_lat = q_nope @ W_UK  -> (B, 1, H, r)
+    w_uk = params["wkv_b"][..., :m.qk_nope_head_dim]       # (r, H, dn)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshk,btk->bhst", q_rope, krope_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = _decode_valid(S_cache, pos, window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", w.astype(c_cache.dtype), c_cache,
+                         preferred_element_type=jnp.float32)
+    w_uv = params["wkv_b"][..., m.qk_nope_head_dim:]       # (r, H, dv)
+    v_out = jnp.einsum("bshr,rhk->bshk", ctx_lat.astype(x.dtype), w_uv)
+    return jnp.einsum("bshk,hkd->bsd", v_out, params["wo"]), (c_cache, krope_cache)

@@ -1,0 +1,149 @@
+"""Shared building blocks: norms, projections, MLPs, RoPE, embeddings.
+
+Everything is pure JAX over nested-dict param trees — no flax.  Init
+functions return the param tree; apply functions take (params, x, ...).
+Params are created in ``cfg.dtype``; norm statistics accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, in_axis=-2):
+    """Truncated-normal fan-in init (LeCun-style) — stable for deep stacks."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    scale = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for silu act, plain 2-layer for gelu)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d, d_ff, act, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, d_ff), dtype),
+         "w_out": dense_init(ks[1], (d_ff, d), dtype)}
+    if act == "silu":
+        p["w_gate"] = dense_init(ks[2], (d, d_ff), dtype)
+    return p
+
+
+def mlp(params, x, act):
+    h = jnp.einsum("...d,df->...f", x, params["w_in"])
+    if act == "silu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"])
+
+
+def mlp_flops(d, d_ff, act, n_tokens):
+    mults = 3 if act == "silu" else 2
+    return 2 * mults * d * d_ff * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)          # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D) or (..., S, D); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == angles.ndim + 1:              # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Token embedding / logits head
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab, d, dtype, tie):
+    ks = jax.random.split(key, 2)
+    p = {"table": embed_init(ks[0], (vocab, d), dtype)}
+    if not tie:
+        p["head"] = dense_init(ks[1], (d, vocab), dtype)
+    return p
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    if "head" in params:
+        return jnp.einsum("...d,dv->...v", x, params["head"])
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy: never materialises (B, S, V) at once.
+# ---------------------------------------------------------------------------
+def chunked_ce_loss(embed_params, x, labels, chunk=512, mask=None):
+    """x: (B, S, d) final hidden; labels: (B, S) int32. Mean token NLL."""
+    B, S, _ = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc, mc):
+        # rematerialised: the (chunk, vocab) logits are recomputed in the
+        # backward pass instead of being saved per scan step
+        logits = unembed(embed_params, xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mc), jnp.sum(mc)
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        tot, cnt = chunk_loss(xc, lc, mc)
+        return (carry[0] + tot, carry[1] + cnt), None
+
+    xs = (x[:, :n * chunk].reshape(B, n, chunk, -1).swapaxes(0, 1),
+          labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1),
+          mask[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1))
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+    if rem:
+        t2, c2 = chunk_loss(x[:, n * chunk:], labels[:, n * chunk:],
+                            mask[:, n * chunk:])
+        tot, cnt = tot + t2, cnt + c2
+    return tot / jnp.maximum(cnt, 1.0)

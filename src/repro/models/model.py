@@ -1,0 +1,489 @@
+"""Model assembly: every assigned architecture behind one API.
+
+The decoder stack is grouped into *stages* — maximal runs of layers with
+identical (kind, is_moe) structure.  Each stage's per-layer params are
+stacked on a leading axis and executed with ``jax.lax.scan``, so HLO size
+is O(#stages), never O(depth) — this keeps 512-device dry-run compiles
+tractable for 80-layer models.  Heterogeneous stacks (RecurrentGemma's
+(rglru, rglru, attn_local) pattern) simply produce more, smaller stages.
+
+Public API:
+    init_params(key, cfg)                   -> param pytree
+    loss_fn(params, batch, cfg)             -> scalar NLL (+ MoE aux)
+    prefill(params, batch, cfg, cache_len)  -> (last_logits, cache)
+    decode_step(params, tokens, cache, cfg) -> (logits, cache)
+    init_cache(cfg, batch, max_len, ...)    -> zeroed cache at position pos
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_MLA, MAMBA2, RGLRU,
+                                ModelConfig)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (chunked_ce_loss, dtype_of, embed,
+                                 embedding_init, mlp, mlp_init, rmsnorm,
+                                 rmsnorm_init, unembed)
+
+
+# ---------------------------------------------------------------------------
+# Stage structure
+# ---------------------------------------------------------------------------
+def model_stages(cfg: ModelConfig):
+    """(kind, moe_flag, count) runs over the decoder stack."""
+    kinds = cfg.layer_kinds()
+    runs = []
+    for i, k in enumerate(kinds):
+        moe_flag = cfg.is_moe_layer(i) and k != MAMBA2
+        if runs and runs[-1][0] == k and runs[-1][1] == moe_flag:
+            runs[-1][2] += 1
+        else:
+            runs.append([k, moe_flag, 1])
+    return [tuple(r) for r in runs]
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sliding-window rewrite used for long_500k on full-attention archs
+    (beyond-paper adaptation, see DESIGN.md §4)."""
+    if cfg.supports_long_context():
+        return cfg
+    w = cfg.long_context_window
+    changes = {"window": w if cfg.window == 0 else min(cfg.window, w)}
+    if cfg.attn_kind == ATTN:
+        changes["attn_kind"] = ATTN_LOCAL
+    if cfg.layer_pattern:
+        changes["layer_pattern"] = tuple(
+            ATTN_LOCAL if k == ATTN else k for k in cfg.layer_pattern)
+    return dataclasses.replace(cfg, **changes)
+
+
+def _window_for(cfg, kind):
+    if kind == ATTN_LOCAL:
+        return cfg.window
+    if kind == ATTN_MLA:
+        return cfg.window          # 0 unless long-context variant
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg, kind, moe_flag, cross=False):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 8)
+    p = {"ln1": rmsnorm_init(d, dt)}
+    if kind in (ATTN, ATTN_LOCAL):
+        p["attn"] = attn_mod.gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                      hd, dt)
+    elif kind == ATTN_MLA:
+        p["attn"] = attn_mod.mla_init(ks[0], cfg, dt)
+    elif kind == RGLRU:
+        p["attn"] = rglru_mod.rglru_init(ks[0], cfg, dt)
+    elif kind == MAMBA2:
+        p["attn"] = ssm_mod.mamba2_init(ks[0], cfg, dt)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_cross"] = rmsnorm_init(d, dt)
+        p["cross"] = attn_mod.cross_init(ks[1], d, cfg.n_heads, hd, dt)
+    if kind != MAMBA2:
+        p["ln2"] = rmsnorm_init(d, dt)
+        if moe_flag:
+            p["ffn"] = moe_mod.moe_init(ks[2], cfg, dt)
+        else:
+            p["ffn"] = mlp_init(ks[2], d, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def _stage_init(key, cfg, kind, moe_flag, count, cross=False):
+    keys = jax.random.split(key, count)
+    return jax.vmap(lambda k: _layer_init(k, cfg, kind, moe_flag, cross))(keys)
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4 + len(model_stages(cfg))
+                          + cfg.n_encoder_layers)
+    params = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dt,
+                                cfg.tie_embeddings),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+        "stages": {},
+    }
+    cross = cfg.is_encoder_decoder
+    for i, (kind, moe_flag, count) in enumerate(model_stages(cfg)):
+        params["stages"][f"stage_{i}"] = _stage_init(
+            ks[2 + i], cfg, kind, moe_flag, count, cross)
+    if cfg.is_encoder_decoder:
+        params["enc"] = {
+            "stages": {"stage_0": _stage_init(
+                ks[1], cfg, ATTN, False, cfg.n_encoder_layers)},
+            "final_norm": rmsnorm_init(cfg.d_model, dt),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+def _block_forward(lp, x, cfg, kind, moe_flag, positions, *, causal=True,
+                   enc_kv=None, want_cache=False):
+    """Returns (x, aux, cache_entry_or_None)."""
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    window = _window_for(cfg, kind)
+    cache = None
+    if kind in (ATTN, ATTN_LOCAL):
+        y, (k, v) = attn_mod.gqa_prefill(lp["attn"], h, positions, cfg,
+                                         window=window, causal=causal)
+        if want_cache:
+            cache = {"k": k, "v": v}
+    elif kind == ATTN_MLA:
+        y, (c, krope) = attn_mod.mla_prefill(lp["attn"], h, positions, cfg,
+                                             window=window)
+        if want_cache:
+            cache = {"c": c, "k_rope": krope}
+    elif kind == RGLRU:
+        y, st = rglru_mod.rglru_prefill(lp["attn"], h, cfg)
+        if want_cache:
+            cache = st
+    elif kind == MAMBA2:
+        y, st = ssm_mod.mamba2_prefill(lp["attn"], h, cfg)
+        if want_cache:
+            cache = st
+    x = x + y
+    if enc_kv is not None:
+        hc = rmsnorm(lp["ln_cross"], x, cfg.norm_eps)
+        ck, cv = attn_mod.cross_kv(lp["cross"], enc_kv)
+        x = x + attn_mod.cross_attn(lp["cross"], hc, ck, cv,
+                                    impl=cfg.attn_impl)
+        if want_cache:
+            cache = dict(cache or {})
+            cache["cross_k"], cache["cross_v"] = ck, cv
+    aux = jnp.zeros((), jnp.float32)
+    if kind != MAMBA2:
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if moe_flag:
+            f, aux = moe_mod.moe_ffn(lp["ffn"], h2, cfg)
+        else:
+            f = mlp(lp["ffn"], h2, cfg.act)
+        x = x + f
+    return x, aux, cache
+
+
+def _fit_cache_seq(arr, S_cache):
+    """Place a (B, S, ...) prefill cache tensor into an S_cache ring/buffer
+    such that token t sits at slot t %% S_cache (matches decode writes)."""
+    S = arr.shape[1]
+    if S == S_cache:
+        return arr
+    if S < S_cache:
+        pad = [(0, 0)] * arr.ndim
+        pad[1] = (0, S_cache - S)
+        return jnp.pad(arr, pad)
+    tail = arr[:, S - S_cache:]
+    slots = (jnp.arange(S - S_cache, S)) % S_cache
+    out = jnp.zeros(arr.shape[:1] + (S_cache,) + arr.shape[2:], arr.dtype)
+    return out.at[:, slots].set(tail)
+
+
+def _run_stage(stage_params, x, cfg, kind, moe_flag, positions, *,
+               causal=True, enc_out=None, want_cache=False, remat=False,
+               seq_shard=False):
+    cross = enc_out is not None
+
+    def body(carry, lp):
+        h, aux = carry
+        if seq_shard:
+            # Megatron-style sequence parallelism: the residual stream is
+            # sharded over the model axis on the sequence dim between
+            # blocks; GSPMD inserts the all-gather / reduce-scatter pair
+            # around attention/FFN.  Shrinks the per-layer scan carry the
+            # backward pass must keep by 1/model-axis.
+            from jax.sharding import PartitionSpec as P
+            h = jax.lax.with_sharding_constraint(h, P(None, "model", None))
+        h, a, cache = _block_forward(lp, h, cfg, kind, moe_flag, positions,
+                                     causal=causal,
+                                     enc_kv=enc_out if cross else None,
+                                     want_cache=want_cache)
+        return (h, aux + a), cache
+
+    init = (x, jnp.zeros((), jnp.float32))
+    count = jax.tree.leaves(stage_params)[0].shape[0]
+    G = cfg.remat_group
+    if remat and G > 1 and count % G == 0 and count > G:
+        # grouped (sqrt-style) remat: outer scan saves carries only at
+        # group boundaries; the checkpointed group body re-runs its G
+        # inner layers during backward.
+        grouped = jax.tree.map(
+            lambda a: a.reshape((count // G, G) + a.shape[1:]), stage_params)
+
+        def gbody(carry, glp):
+            return jax.lax.scan(body, carry, glp)
+
+        (x, aux), caches = jax.lax.scan(jax.checkpoint(gbody), init, grouped)
+        if caches is not None:
+            caches = jax.tree.map(
+                lambda a: a.reshape((count,) + a.shape[2:]), caches)
+        return x, aux, caches
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), caches = jax.lax.scan(body, init, stage_params)
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Frontends (stubs per assignment: embeddings come precomputed)
+# ---------------------------------------------------------------------------
+def _sinusoid(positions, d):
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(params, batch, cfg):
+    """Returns (x (B,S,d), positions (B,S), labels_offset)."""
+    dt = dtype_of(cfg)
+    if cfg.frontend == "vision_stub":
+        tok_emb = embed(params["embed"], batch["tokens"]).astype(dt)
+        patches = batch["patch_embeds"].astype(dt)
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return x, positions, patches.shape[1]
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(dt)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return x, positions, 0
+
+
+def encode(params, frames, cfg):
+    """Whisper encoder over stubbed frame embeddings (B, T, d)."""
+    dt = dtype_of(cfg)
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = frames.astype(dt) + _sinusoid(pos, cfg.d_model).astype(dt)
+    x, _, _ = _run_stage(params["enc"]["stages"]["stage_0"], x, cfg, ATTN,
+                         False, pos, causal=False)
+    return rmsnorm(params["enc"]["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Full forward -> hidden states
+# ---------------------------------------------------------------------------
+def forward_hidden(params, batch, cfg, *, mode="train", want_cache=False):
+    """Returns (hidden (B,S,d), aux, caches list per stage, n_prefix)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens).astype(dtype_of(cfg))
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+        n_prefix = 0
+    else:
+        x, positions, n_prefix = _embed_inputs(params, batch, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    remat = cfg.remat and mode == "train"
+    seq_shard = (cfg.seq_parallel and mode == "train"
+                 and x.shape[1] % 16 == 0)
+    for i, (kind, moe_flag, _count) in enumerate(model_stages(cfg)):
+        x, aux, cache = _run_stage(
+            params["stages"][f"stage_{i}"], x, cfg, kind, moe_flag, positions,
+            causal=True, enc_out=enc_out, want_cache=want_cache, remat=remat,
+            seq_shard=seq_shard)
+        aux_total = aux_total + aux
+        caches.append(cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total, caches, n_prefix
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Mean next-token NLL (+ MoE load-balance aux)."""
+    hidden, aux, _, n_prefix = forward_hidden(params, batch, cfg, mode="train")
+    if n_prefix:
+        hidden = hidden[:, n_prefix:]
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    nll = chunked_ce_loss(params["embed"], hidden, labels, mask=mask)
+    coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return nll + coef * aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+def _cache_seq_len(cfg, kind, max_len):
+    w = _window_for(cfg, kind)
+    return min(max_len, w) if w else max_len
+
+
+def _stage_cache_zeros(cfg, kind, count, B, max_len, enc_len, dt):
+    hd = cfg.resolved_head_dim()
+    S_c = _cache_seq_len(cfg, kind, max_len)
+    if kind in (ATTN, ATTN_LOCAL):
+        if cfg.kv_quant:
+            c = {"k": jnp.zeros((count, B, S_c, cfg.n_kv_heads, hd),
+                                jnp.int8),
+                 "v": jnp.zeros((count, B, S_c, cfg.n_kv_heads, hd),
+                                jnp.int8),
+                 "k_s": jnp.zeros((count, B, S_c, cfg.n_kv_heads),
+                                  jnp.bfloat16),
+                 "v_s": jnp.zeros((count, B, S_c, cfg.n_kv_heads),
+                                  jnp.bfloat16)}
+        else:
+            c = {"k": jnp.zeros((count, B, S_c, cfg.n_kv_heads, hd), dt),
+                 "v": jnp.zeros((count, B, S_c, cfg.n_kv_heads, hd), dt)}
+    elif kind == ATTN_MLA:
+        m = cfg.mla
+        c = {"c": jnp.zeros((count, B, S_c, m.kv_lora_rank), dt),
+             "k_rope": jnp.zeros((count, B, S_c, m.qk_rope_head_dim), dt)}
+    elif kind == RGLRU:
+        d_rnn = cfg.rglru.d_rnn or cfg.d_model
+        c = {"conv_state": jnp.zeros((count, B, cfg.rglru.conv_width - 1,
+                                      d_rnn), dt),
+             "h": jnp.zeros((count, B, d_rnn), dt)}
+    elif kind == MAMBA2:
+        s = cfg.ssm
+        d_in, nh, conv_dim = ssm_mod.mamba2_dims(cfg)
+        c = {"conv_state": jnp.zeros((count, B, s.conv_width - 1, conv_dim),
+                                     dt),
+             "ssm_state": jnp.zeros((count, B, nh, s.head_dim, s.d_state),
+                                    jnp.float32)}
+    else:
+        raise ValueError(kind)
+    if cfg.is_encoder_decoder:
+        c["cross_k"] = jnp.zeros((count, B, enc_len, cfg.n_heads, hd), dt)
+        c["cross_v"] = jnp.zeros((count, B, enc_len, cfg.n_heads, hd), dt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               enc_len: int = 0, pos: int = 0):
+    dt = dtype_of(cfg)
+    cache = {"pos": jnp.full((batch_size,), pos, jnp.int32), "stages": {}}
+    for i, (kind, _moe, count) in enumerate(model_stages(cfg)):
+        cache["stages"][f"stage_{i}"] = _stage_cache_zeros(
+            cfg, kind, count, batch_size, max_len, enc_len, dt)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (returns last-token logits + populated cache)
+# ---------------------------------------------------------------------------
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    hidden, _aux, caches, _ = forward_hidden(params, batch, cfg,
+                                             mode="prefill", want_cache=True)
+    last = hidden[:, -1]
+    logits = unembed(params["embed"], last)
+    if cfg.frontend == "vision_stub":
+        S = batch["tokens"].shape[1] + batch["patch_embeds"].shape[1]
+    else:
+        S = batch["tokens"].shape[1]
+    B = hidden.shape[0]
+    cache = {"pos": jnp.full((B,), S, jnp.int32), "stages": {}}
+    for i, (kind, _moe, _count) in enumerate(model_stages(cfg)):
+        sc = caches[i]
+        S_c = _cache_seq_len(cfg, kind, max_len)
+        fitted = {}
+        for name, arr in sc.items():
+            if kind in (ATTN, ATTN_LOCAL) and name in ("k", "v"):
+                fit = jax.vmap(lambda a: _fit_cache_seq(a, S_c))(arr)
+                if cfg.kv_quant:
+                    q, s = attn_mod.quantize_kv(fit)
+                    fitted[name] = q
+                    fitted[name + "_s"] = s
+                else:
+                    fitted[name] = fit
+            elif kind == ATTN_MLA and name in ("c", "k_rope"):
+                fitted[name] = jax.vmap(
+                    lambda a: _fit_cache_seq(a, S_c))(arr)
+            else:
+                fitted[name] = arr
+        cache["stages"][f"stage_{i}"] = fitted
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token, scan over (params, cache) per stage
+# ---------------------------------------------------------------------------
+def _block_decode(lp, x1, c, pos, cfg, kind, moe_flag):
+    h = rmsnorm(lp["ln1"], x1, cfg.norm_eps)
+    window = _window_for(cfg, kind)
+    if kind in (ATTN, ATTN_LOCAL):
+        if "k_s" in c:
+            y, (k, v, ks, vs) = attn_mod.gqa_decode(
+                lp["attn"], h, c["k"], c["v"], pos, cfg, window=window,
+                k_scale=c["k_s"], v_scale=c["v_s"])
+            c = dict(c, k=k, v=v, k_s=ks, v_s=vs)
+        else:
+            y, (k, v) = attn_mod.gqa_decode(lp["attn"], h, c["k"], c["v"],
+                                            pos, cfg, window=window)
+            c = dict(c, k=k, v=v)
+    elif kind == ATTN_MLA:
+        y, (cc, kr) = attn_mod.mla_decode(lp["attn"], h, c["c"], c["k_rope"],
+                                          pos, cfg, window=window)
+        c = dict(c, c=cc, k_rope=kr)
+    elif kind == RGLRU:
+        y, st = rglru_mod.rglru_decode(lp["attn"], h,
+                                       {k: c[k] for k in ("conv_state", "h")},
+                                       cfg)
+        c = dict(c, **st)
+    elif kind == MAMBA2:
+        y, st = ssm_mod.mamba2_decode(
+            lp["attn"], h, {k: c[k] for k in ("conv_state", "ssm_state")}, cfg)
+        c = dict(c, **st)
+    x1 = x1 + y
+    if "cross_k" in c:
+        hc = rmsnorm(lp["ln_cross"], x1, cfg.norm_eps)
+        out = attn_mod.cross_attn(lp["cross"], hc, c["cross_k"], c["cross_v"],
+                                  impl="naive")
+        x1 = x1 + out
+    if kind != MAMBA2:
+        h2 = rmsnorm(lp["ln2"], x1, cfg.norm_eps)
+        if moe_flag:
+            f, _ = moe_mod.moe_ffn(lp["ffn"], h2, cfg)
+        else:
+            f = mlp(lp["ffn"], h2, cfg.act)
+        x1 = x1 + f
+    return x1, c
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    """tokens: (B,) int32.  Returns (logits (B, V), new cache).
+
+    ``cache['pos']`` is a per-request (B,) position vector, so a decode
+    batch may mix requests at different sequence offsets (continuous
+    batching)."""
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens)[:, None].astype(dtype_of(cfg))
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoid(pos[:, None], cfg.d_model).astype(x.dtype)
+    new_cache = {"pos": pos + 1, "stages": {}}
+    for i, (kind, moe_flag, _count) in enumerate(model_stages(cfg)):
+        sp = params["stages"][f"stage_{i}"]
+        sc = cache["stages"][f"stage_{i}"]
+
+        def body(h, xs):
+            lp, c = xs
+            h, c_new = _block_decode(lp, h, c, pos, cfg, kind, moe_flag)
+            return h, c_new
+
+        x, sc_new = jax.lax.scan(body, x, (sp, sc))
+        new_cache["stages"][f"stage_{i}"] = sc_new
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, 0])
+    return logits, new_cache

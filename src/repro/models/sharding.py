@@ -1,0 +1,190 @@
+"""PartitionSpec trees for params / caches / batches.
+
+Megatron-style tensor parallelism over the mesh's ``model`` axis, data
+parallelism over ``("pod", "data")``:
+
+- q/o head projections and FFN hidden shard over ``model``;
+- KV projections shard only when ``n_kv_heads`` divides the axis
+  (GQA with few KV groups replicates KV — standard practice);
+- MoE expert stacks shard over experts when E divides the axis (expert
+  parallelism), else over the expert hidden dim (tensor parallelism);
+- vocab shards over ``model`` (embedding rows / head columns);
+- the batch axis of inputs and caches shards over as many data axes as
+  divide it (long_500k's batch=1 therefore replicates — the §Perf
+  sequence-sharding iteration improves on that).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _div(n, size):
+    return size > 0 and n % size == 0
+
+
+def batch_axes(batch: int, mesh, include_model: bool = False) -> tuple:
+    """Largest prefix-product of data-like axes that divides the batch.
+
+    ``include_model=True`` (training) also spreads the batch over the
+    model axis — ZeRO-style: weights are gathered at use, so every axis
+    is a batch axis and per-device token count is minimal."""
+    names = [n for n in mesh.axis_names if n in ("pod", "data")]
+    if include_model and "model" in mesh.axis_names:
+        names = [n for n in ("data", "model", "pod")
+                 if n in mesh.axis_names]
+    chosen = []
+    prod = 1
+    for n in names:
+        sz = mesh.shape[n]
+        if batch % (prod * sz) == 0:
+            chosen.append(n)
+            prod *= sz
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def param_specs(params, cfg: ModelConfig, mesh):
+    """Spec tree matching the param tree (stacked-stage layout).
+
+    With ``cfg.fsdp`` the largest still-unsharded weight dim additionally
+    shards over the ``data`` axis (ZeRO-3 style: XLA re-gathers at use,
+    while the persistent param/grad/optimizer state is 1/data-size per
+    device)."""
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    dsize = mesh.shape["data"] if "data" in mesh.axis_names else 1
+    kv_ok = _div(cfg.n_kv_heads, msize)
+    q_ok = _div(cfg.n_heads, msize)
+    # head-dim fallback: when the head count doesn't divide the model
+    # axis (whisper 20H, GQA kv=8/4/1), shard the head_dim contraction
+    # instead — partial sums + all-reduce, still valid tensor parallelism
+    hd_ok = _div(cfg.resolved_head_dim(), msize)
+    vocab_ok = _div(cfg.vocab_size, msize)
+    e_ok = cfg.moe is not None and _div(cfg.moe.n_experts, msize)
+
+    def fsdp_ify(spec: P, shape, stacked: bool) -> P:
+        if not cfg.fsdp or dsize <= 1 or len(shape) < 2:
+            return spec
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        # best unsharded dim (skip the stacked-layer dim 0)
+        cands = [i for i in range(int(stacked), len(shape))
+                 if axes[i] is None and shape[i] % dsize == 0]
+        if not cands:
+            return spec
+        best = max(cands, key=lambda i: shape[i])
+        axes[best] = "data"
+        return P(*axes)
+
+    def spec(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else ""
+        stacked = "stages" in keys
+        r = leaf.ndim
+        m = "model"
+
+        def s(*axes):
+            """Prepend the stacked-layer None axis when inside a stage."""
+            if stacked and r == len(axes) + 1:
+                return P(None, *axes)
+            assert r == len(axes), (keys, leaf.shape, axes)
+            return P(*axes)
+
+        if name == "table":
+            return P(m if vocab_ok else None, None)
+        if name == "head":
+            return P(None, m if vocab_ok else None)
+        if name == "scale":
+            return P(*([None] * r))
+        if name in ("w_gate", "w_in", "w_out") and r - int(stacked) == 3:
+            # stacked MoE expert weights: (L, E, d, f) / (L, E, f, d)
+            if name == "w_out":
+                return s(m, None, None) if e_ok else s(None, m, None)
+            return s(m, None, None) if e_ok else s(None, None, m)
+        if name == "router":
+            return s(None, None)
+        if name in ("wq", "wk", "wv"):
+            ok = q_ok if (name == "wq" or "cross" in keys) else kv_ok
+            if ok:
+                return s(None, m, None)
+            return s(None, None, m) if hd_ok else s(None, None, None)
+        if name == "wo":
+            if q_ok:
+                return s(m, None, None)
+            return s(None, m, None) if hd_ok else s(None, None, None)
+        if name in ("wq_a", "wkv_a"):
+            return s(None, None)
+        if name in ("wq_b", "wkv_b"):
+            return s(None, m if q_ok else None, None)
+        if name in ("w_in", "w_gate", "w_branch_x", "w_branch_gate",
+                    "in_proj", "conv_w", "w_gate_a", "w_gate_i"):
+            return s(None, m)
+        if name in ("w_out", "out_proj"):
+            return s(m, None)
+        if name == "conv_b":
+            return s(m)
+        if name in ("A_log", "dt_bias", "D", "lam"):
+            nh = leaf.shape[-1]
+            return s(m if _div(nh, msize) else None)
+        return P(*([None] * r))
+
+    def spec_with_fsdp(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        base = spec(path, leaf)
+        if keys and keys[-1] == "scale":
+            return base                      # norms stay replicated
+        return fsdp_ify(base, leaf.shape, "stages" in keys)
+
+    return jax.tree_util.tree_map_with_path(spec_with_fsdp, params)
+
+
+def cache_specs(cache, cfg: ModelConfig, mesh, batch: int):
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    b = batch_axes(batch, mesh)
+    kv_ok = _div(cfg.n_kv_heads, msize)
+    hd_ok = _div(cfg.resolved_head_dim(), msize)
+
+    def spec(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else ""
+        if name == "pos":
+            return P()
+        if name in ("k", "v"):
+            if kv_ok:
+                return P(None, b, None, "model", None)
+            return P(None, b, None, None, "model" if hd_ok else None)
+        if name in ("k_s", "v_s"):
+            return P(None, b, None, "model" if kv_ok else None)
+        if name == "c":
+            r = leaf.shape[-1]
+            return P(None, b, None, "model" if _div(r, msize) else None)
+        if name == "k_rope":
+            return P(None, b, None, None)
+        if name in ("cross_k", "cross_v"):
+            if _div(cfg.n_heads, msize):
+                return P(None, b, None, "model", None)
+            return P(None, b, None, None, "model" if hd_ok else None)
+        if name == "conv_state":
+            ch = leaf.shape[-1]
+            return P(None, b, None, "model" if _div(ch, msize) else None)
+        if name == "ssm_state":
+            nh = leaf.shape[2]
+            return P(None, b, "model" if _div(nh, msize) else None, None,
+                     None)
+        if name == "h":
+            d = leaf.shape[-1]
+            return P(None, b, "model" if _div(d, msize) else None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def batch_specs(batch_tree, mesh, batch: int, include_model: bool = False):
+    b = batch_axes(batch, mesh, include_model)
+
+    def spec(leaf):
+        return P(b, *([None] * (leaf.ndim - 1))) if leaf.ndim else P()
+
+    return jax.tree_util.tree_map(spec, batch_tree)

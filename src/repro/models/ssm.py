@@ -1,0 +1,213 @@
+"""Mamba-2 block with the SSD (state-space duality) chunked algorithm.
+
+Prefill runs the chunked dual form [arXiv:2405.21060 §6]: intra-chunk
+"attention" with decay-masked scores + inter-chunk recurrence over chunk
+states (a ``lax.scan`` carrying the (B, H, P, N) state).  Decode runs the
+O(1)/token diagonal recurrence.  The Pallas kernel in
+``repro/kernels/ssd_scan.py`` implements the same chunk schedule for TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba2_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    ks = jax.random.split(key, 6)
+    proj_out_dim = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default)
+    dt = jnp.exp(jax.random.uniform(ks[3], (nh,), jnp.float32)
+                 * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))    # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out_dim), dtype, in_axis=0),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_in,), dtype)},
+        "out_proj": dense_init(ks[2], (d_in, d), dtype, in_axis=0),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_in, nh, _ = mamba2_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_in + 2 * gn], axis=-1)
+    return z, xbc, dt_raw
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],       # (W, 1, C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_tail(x, conv_width):
+    """Last (W-1) raw conv inputs, left-padded with zeros if S < W-1."""
+    need = conv_width - 1
+    S = x.shape[1]
+    if S >= need:
+        return x[:, S - need:]
+    return jnp.pad(x, ((0, 0), (need - S, 0), (0, 0)))
+
+
+def conv_step(x1, conv_state, w, b):
+    """One-token conv.  x1: (B, C); conv_state: (B, W-1, C) past inputs."""
+    window = jnp.concatenate([conv_state, x1[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out.astype(x1.dtype), window[:, 1:]
+
+
+def ssd_chunked(x, la, Bm, Cm, chunk, initial_state=None):
+    """SSD dual form.  x: (B,S,H,P); la: (B,S,H) log-decay (<=0);
+    Bm/Cm: (B,S,G,N).  Returns (y, final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xs = x.reshape(Bsz, nc, chunk, H, P)
+    las = la.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bs = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cs = Cm.reshape(Bsz, nc, chunk, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bs, rep, axis=3)             # (B, nc, Q, H, N)
+    Ch = jnp.repeat(Cs, rep, axis=3)
+
+    la_cum = jnp.cumsum(las, axis=2)             # (B, nc, Q, H)
+    la_tot = la_cum[:, :, -1]                    # (B, nc, H)
+
+    # ---- intra-chunk (dual / attention-like) ------------------------------
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))
+    decay = la_cum[:, :, :, :, None].swapaxes(2, 3) - \
+        la_cum[:, :, :, :, None].swapaxes(2, 3).swapaxes(-1, -2)
+    # decay[b,c,h,i,j] = la_cum[i] - la_cum[j]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores * L,
+                         xs.astype(jnp.float32))
+
+    # ---- chunk states ------------------------------------------------------
+    # state_c = sum_j exp(la_tot - la_cum[j]) * B_j x_j^T
+    w = jnp.exp(la_tot[:, :, None] - la_cum)     # (B, nc, Q, H)
+    states = jnp.einsum("bcjhn,bcjhp,bcjh->bchpn", Bh.astype(jnp.float32),
+                        xs.astype(jnp.float32), w)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def body(s_in, inp):
+        st_c, la_tot_c, la_cum_c, C_c = inp      # per-chunk slices
+        # y_inter[i] = exp(la_cum[i]) * C_i . s_in
+        yi = jnp.einsum("bihn,bhpn,bih->bihp", C_c.astype(jnp.float32),
+                        s_in, jnp.exp(la_cum_c))
+        s_out = jnp.exp(la_tot_c)[:, :, None, None] * s_in + st_c
+        return s_out, yi
+
+    xs_scan = (states.swapaxes(0, 1), la_tot.swapaxes(0, 1),
+               la_cum.swapaxes(0, 1), Ch.swapaxes(0, 1))
+    final_state, y_inter = jax.lax.scan(body, s0, xs_scan)
+    y = y_intra + y_inter.swapaxes(0, 1)
+    y = y.reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(x1, la1, B1, C1, state):
+    """One-token recurrence.  x1: (B,H,P); la1: (B,H); B1/C1: (B,G,N);
+    state: (B,H,P,N)."""
+    H = x1.shape[1]
+    G = B1.shape[1]
+    Bh = jnp.repeat(B1, H // G, axis=1)          # (B,H,N)
+    Ch = jnp.repeat(C1, H // G, axis=1)
+    a = jnp.exp(la1.astype(jnp.float32))[:, :, None, None]
+    state = a * state + jnp.einsum("bhp,bhn->bhpn", x1.astype(jnp.float32),
+                                   Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    return y.astype(x1.dtype), state
+
+
+def mamba2_prefill(params, x, cfg, initial=None):
+    """x: (B, S, d).  Returns (y, cache dict with conv_state + ssm_state)."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc_conv = jax.nn.silu(causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    gn = s.n_groups * s.d_state
+    xs, Bm, Cm = jnp.split(xbc_conv, [d_in, d_in + gn], axis=-1)
+    Bsz, S, _ = x.shape
+    xh = xs.reshape(Bsz, S, nh, s.head_dim)
+    Bm = Bm.reshape(Bsz, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(Bsz, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    la = -dt * jnp.exp(params["A_log"])          # (B, S, H) log decay
+    x_in = xh * dt[..., None].astype(xh.dtype)
+    init_state = None if initial is None else initial["ssm_state"]
+    y, final_state = ssd_chunked(x_in, la, Bm, Cm, s.chunk_size, init_state)
+    y = y + (params["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(Bsz, S, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsp,pd->bsd", y, params["out_proj"])
+    cache = {"conv_state": _conv_tail(xbc, s.conv_width),
+             "ssm_state": final_state}
+    return out, cache
+
+
+def mamba2_decode(params, x1, cache, cfg):
+    """x1: (B, 1, d)."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    proj = jnp.einsum("bsd,dp->bsp", x1, params["in_proj"])[:, 0]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc_c, conv_state = conv_step(xbc, cache["conv_state"], params["conv_w"],
+                                  params["conv_b"])
+    xbc_c = jax.nn.silu(xbc_c)
+    gn = s.n_groups * s.d_state
+    xs, Bm, Cm = jnp.split(xbc_c, [d_in, d_in + gn], axis=-1)
+    Bsz = x1.shape[0]
+    xh = xs.reshape(Bsz, nh, s.head_dim)
+    Bm = Bm.reshape(Bsz, s.n_groups, s.d_state)
+    Cm = Cm.reshape(Bsz, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    la = -dt * jnp.exp(params["A_log"])
+    y, state = ssd_step(xh * dt[..., None].astype(xh.dtype), la, Bm, Cm,
+                        cache["ssm_state"])
+    y = y + (params["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(Bsz, 1, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z[:, None]), cfg.norm_eps)
+    out = jnp.einsum("bsp,pd->bsd", y, params["out_proj"])
+    return out, {"conv_state": conv_state, "ssm_state": state}

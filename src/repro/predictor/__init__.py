@@ -1,0 +1,5 @@
+from repro.predictor.mope import MoPE, Oracle, SingleProxy, l1_error
+from repro.predictor.router import Router, router_accuracy, train_router
+
+__all__ = ["MoPE", "Oracle", "SingleProxy", "l1_error", "Router",
+           "router_accuracy", "train_router"]

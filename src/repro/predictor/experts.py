@@ -1,0 +1,74 @@
+"""Regression experts: small JAX MLPs trained with L1 loss on
+log-output-length (DESIGN.md §3: stand-in for the paper's BERT-base
+regression heads — same framework, container-sized backbone)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.predictor.features import DIM
+from repro.training.optim import adam
+
+
+def expert_init(key, hidden=64, dim=DIM):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = (2.0 / dim) ** 0.5
+    s2 = (2.0 / hidden) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden), jnp.float32) * s1,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, hidden), jnp.float32) * s2,
+        "b2": jnp.zeros((hidden,)),
+        "w3": jax.random.normal(k3, (hidden, 1), jnp.float32) * s2,
+        "b3": jnp.zeros((1,)),
+    }
+
+
+def expert_apply(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return (h @ params["w3"] + params["b3"])[..., 0]   # log-length
+
+
+def _l1_loss(params, x, y_log):
+    return jnp.mean(jnp.abs(expert_apply(params, x) - y_log))
+
+
+@jax.jit
+def _train_epoch(params, opt_state, x, y_log, perm, opt=adam(3e-3)):
+    def step(carry, idx):
+        params, opt_state = carry
+        xb, yb = x[idx], y_log[idx]
+        loss, grads = jax.value_and_grad(_l1_loss)(params, xb, yb)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), loss
+
+    (params, opt_state), losses = jax.lax.scan(step, (params, opt_state),
+                                               perm)
+    return params, opt_state, losses.mean()
+
+
+def train_expert(feats: np.ndarray, lengths: np.ndarray, *, seed=0,
+                 epochs=40, batch=256, hidden=64):
+    """Returns (params, final L1 loss in log space)."""
+    x = jnp.asarray(feats)
+    y_log = jnp.log1p(jnp.asarray(lengths, jnp.float32))
+    n = x.shape[0]
+    n_batches = max(n // batch, 1)
+    params = expert_init(jax.random.key(seed), hidden=hidden)
+    opt = adam(3e-3)
+    opt_state = opt.init(params)
+    rng = np.random.default_rng(seed)
+    loss = None
+    for _ in range(epochs):
+        perm = rng.permutation(n)[: n_batches * batch]
+        perm = jnp.asarray(perm.reshape(n_batches, batch))
+        params, opt_state, loss = _train_epoch(params, opt_state, x, y_log,
+                                               perm)
+    return params, float(loss)
+
+
+def predict_tokens(params, feats: np.ndarray) -> np.ndarray:
+    out = expert_apply(params, jnp.asarray(feats, jnp.float32))
+    return np.maximum(np.expm1(np.asarray(out)), 1.0)

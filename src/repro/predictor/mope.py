@@ -1,0 +1,119 @@
+"""MoPE — Mixture of Prediction Experts (paper §6) + baselines.
+
+``MoPE.predict(req)`` fills the request's predicted output tokens,
+latency, TPS and utilization — the four holistic-fairness inputs.
+Baselines: ``SingleProxy`` (one unified expert, the μ-Serve-style
+baseline [31]) and ``Oracle`` (perfect lengths — Table 1's upper bound).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.request import Request
+from repro.predictor.experts import predict_tokens, train_expert
+from repro.predictor.features import featurize, featurize_batch
+from repro.predictor.metric_map import MetricMap
+from repro.predictor.router import Router, regime_of, train_router
+from repro.serving.costmodel import CostModel
+
+
+class BasePredictor:
+    """Shared predict/map/observe plumbing (subclasses implement tokens).
+
+    Besides the paper's metric-map calibration, ``observe`` keeps an
+    online per-regime multiplicative bias (EMA of actual/predicted output
+    length) — the live-traffic half of the Algorithm-1 feedback loop that
+    adapts the offline-trained experts to workload drift.
+    """
+
+    def __init__(self, cost_model: CostModel, calibrate: bool = True,
+                 bias_ema: float = 0.05):
+        self.metric_map = MetricMap(cost_model)
+        self.calibrate = calibrate
+        self.bias_ema = bias_ema
+        self._bias = {}
+
+    def predict_tokens(self, req: Request) -> float:
+        raise NotImplementedError
+
+    def _regime(self, req: Request) -> int:
+        return 0
+
+    def predict(self, req: Request) -> Request:
+        raw = float(self.predict_tokens(req))
+        if self.calibrate:
+            raw *= self._bias.get(self._regime(req), 1.0)
+        req.pred_output_len = max(raw, 1.0)
+        lat, tps, util = self.metric_map.predict(req.prompt_len,
+                                                 req.pred_output_len)
+        req.pred_latency, req.pred_tps, req.pred_util = lat, tps, util
+        return req
+
+    def observe(self, req: Request, *, latency: float, tps: float,
+                util: float):
+        """Algorithm 1 line 20: refresh P.map (and bias) with actuals."""
+        self.metric_map.update(req.prompt_len, req.output_len,
+                               latency=latency, tps=tps, util=util)
+        if self.calibrate and req.pred_output_len:
+            r = self._regime(req)
+            cal = self._bias.get(r, 1.0)
+            ratio = req.output_len / max(req.pred_output_len
+                                         / self._bias.get(r, 1.0), 1.0)
+            ratio = float(np.clip(ratio, 0.1, 10.0))
+            self._bias[r] = (1 - self.bias_ema) * cal + self.bias_ema * ratio
+
+
+class MoPE(BasePredictor):
+    def __init__(self, cost_model: CostModel, corpus, n_experts: int = 3,
+                 seed: int = 0, epochs: int = 40, calibrate: bool = True):
+        super().__init__(cost_model, calibrate=calibrate)
+        self.n_experts = n_experts
+        self.router = train_router(corpus, n_experts, seed)
+        self.experts = []
+        outs = np.array([o for _, _, o in corpus], np.float64)
+        regimes = np.array([regime_of(o, self.router.boundaries)
+                            for o in outs])
+        feats = featurize_batch([(kw, pl) for kw, pl, _ in corpus])
+        for r in range(n_experts):
+            m = regimes == r
+            params, _ = train_expert(feats[m], outs[m], seed=seed + r,
+                                     epochs=epochs)
+            self.experts.append(params)
+
+    def _regime(self, req: Request) -> int:
+        return self.router.classify(req.keywords, req.prompt_len)
+
+    def predict_tokens(self, req: Request) -> float:
+        r = self._regime(req)
+        f = featurize(req.keywords, req.prompt_len)[None]
+        return float(predict_tokens(self.experts[r], f)[0])
+
+
+class SingleProxy(BasePredictor):
+    """One unified regression model over the whole corpus."""
+
+    def __init__(self, cost_model: CostModel, corpus, seed: int = 0,
+                 epochs: int = 40, calibrate: bool = True):
+        super().__init__(cost_model, calibrate=calibrate)
+        outs = np.array([o for _, _, o in corpus], np.float64)
+        feats = featurize_batch([(kw, pl) for kw, pl, _ in corpus])
+        self.params, _ = train_expert(feats, outs, seed=seed, epochs=epochs)
+
+    def predict_tokens(self, req: Request) -> float:
+        f = featurize(req.keywords, req.prompt_len)[None]
+        return float(predict_tokens(self.params, f)[0])
+
+
+class Oracle(BasePredictor):
+    def predict_tokens(self, req: Request) -> float:
+        return float(req.output_len)
+
+
+def l1_error(predictor: BasePredictor, corpus) -> float:
+    """Mean absolute token error (paper Fig. 7a: 80 → 33 → 25)."""
+    errs = []
+    for kw, pl, o in corpus:
+        req = Request(rid=-1, client="eval", arrival=0.0, prompt_len=pl,
+                      output_len=o, keywords=kw)
+        errs.append(abs(predictor.predict_tokens(req) - o))
+    return float(np.mean(errs))

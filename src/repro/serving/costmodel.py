@@ -1,0 +1,154 @@
+"""Analytic TPU-v5e serving cost model.
+
+The paper measures wall-clock latency / throughput / GPU-utilization on
+A100s; this container has no accelerator, so the simulator and the
+engine's modeled clock derive those from a roofline over the target
+hardware (DESIGN.md §3, §8): prefill is compute-bound, decode is
+HBM-bound (weights + KV reads), and every batch refresh pays a host
+overhead — exactly the three mechanisms behind the paper's Figure 2
+(monotone latency, non-monotone throughput, stepwise utilization).
+
+Everything is derived from the ``ModelConfig`` so architectures with
+cheaper decode state (MLA latents, SSM constant state, sliding windows)
+get correspondingly different cost curves — the heterogeneity Equinox's
+metric map must capture.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_MLA, MAMBA2, RGLRU,
+                                ModelConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 / chip
+    hbm_bw: float = 819e9               # B/s / chip
+    link_bw: float = 50e9               # B/s / ICI link
+    hbm_bytes: float = 16e9
+    chips: int = 1
+    prefill_eff: float = 0.55           # achievable MFU in prefill
+    bw_eff: float = 0.75                # achievable HBM fraction in decode
+    batch_overhead: float = 0.006       # s per batch refresh (host-bound)
+
+
+V5E = Hardware()
+
+# The paper's synthetic-workload testbed (§7.1): one A100-80GB.  The
+# simulator reproduces the paper's figures against this preset; the
+# dry-run/roofline deliverables use the TPU-v5e mesh.
+A100_80G = Hardware(name="a100-80g", peak_flops=312e12, hbm_bw=1935e9,
+                    link_bw=300e9, hbm_bytes=80e9, chips=1,
+                    prefill_eff=0.5, bw_eff=0.8, batch_overhead=0.006)
+
+
+def kv_bytes_per_token(cfg: ModelConfig, bytes_per_el: int = 2):
+    """(bytes per cached token, context cap per layer kind list).
+
+    Returns a list of (per_token_bytes, window_or_0) per layer so decode
+    read cost can respect sliding windows; recurrent layers contribute a
+    fixed state instead (returned separately)."""
+    per_layer = []
+    fixed_state = 0
+    hd = cfg.resolved_head_dim()
+    for kind in cfg.layer_kinds():
+        if kind == ATTN:
+            per_layer.append((2 * cfg.n_kv_heads * hd * bytes_per_el, 0))
+        elif kind == ATTN_LOCAL:
+            per_layer.append((2 * cfg.n_kv_heads * hd * bytes_per_el,
+                              cfg.window))
+        elif kind == ATTN_MLA:
+            m = cfg.mla
+            per_layer.append(((m.kv_lora_rank + m.qk_rope_head_dim)
+                              * bytes_per_el, cfg.window))
+        elif kind == RGLRU:
+            d_rnn = cfg.rglru.d_rnn or cfg.d_model
+            fixed_state += d_rnn * (cfg.rglru.conv_width + 1) * bytes_per_el
+            per_layer.append((0, 0))
+        elif kind == MAMBA2:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            fixed_state += (nh * s.head_dim * s.d_state * 4
+                            + (d_in + 2 * s.n_groups * s.d_state)
+                            * s.conv_width * bytes_per_el)
+            per_layer.append((0, 0))
+    return per_layer, fixed_state
+
+
+def kv_read_bytes(cfg: ModelConfig, ctx_len: int) -> float:
+    """Bytes of cache state read for ONE decode token at context ctx_len."""
+    per_layer, fixed = kv_bytes_per_token(cfg)
+    total = fixed
+    for per_tok, window in per_layer:
+        eff_ctx = min(ctx_len, window) if window else ctx_len
+        total += per_tok * eff_ctx
+    return float(total)
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, hw: Hardware = V5E):
+        self.cfg = cfg
+        self.hw = hw
+        self.param_bytes = cfg.n_params() * 2          # bf16 weights
+        self.flops_per_token = 2 * cfg.n_active_params()
+        hd = cfg.resolved_head_dim()
+        self.attn_flops_per_ctx = 4 * cfg.n_heads * hd * sum(
+            1 for k in cfg.layer_kinds() if k in (ATTN, ATTN_LOCAL, ATTN_MLA))
+
+    @classmethod
+    def for_serving(cls, cfg: ModelConfig, min_kv_tokens: int = 50_000,
+                    hw: Hardware = V5E) -> "CostModel":
+        """Size the chip count so weights + a healthy KV budget fit —
+        the v5e analogue of the paper's A100-80GB serving testbed."""
+        per_layer, _fixed = kv_bytes_per_token(cfg)
+        per_tok = sum(pt for pt, _ in per_layer)
+        need = (cfg.n_params() * 2 + per_tok * min_kv_tokens) \
+            / (1 - 0.35) / hw.hbm_bytes
+        chips = max(1, int(-(-need // 1)))
+        return cls(cfg, dataclasses.replace(hw, chips=chips))
+
+    # -- phases ---------------------------------------------------------------
+    def prefill_time(self, n_tokens: int, avg_ctx: float = 0.0) -> float:
+        """Compute-bound: all prompt tokens in parallel."""
+        flops = self.flops_per_token * n_tokens \
+            + self.attn_flops_per_ctx * n_tokens * (avg_ctx or n_tokens) / 2
+        t_comp = flops / (self.hw.chips * self.hw.peak_flops
+                          * self.hw.prefill_eff)
+        t_mem = self.param_bytes / (self.hw.chips * self.hw.hbm_bw
+                                    * self.hw.bw_eff)
+        return max(t_comp, t_mem)
+
+    def decode_step_time(self, ctx_lens) -> float:
+        """Memory-bound: one token for every running request."""
+        b = len(ctx_lens)
+        if b == 0:
+            return 0.0
+        bytes_moved = self.param_bytes + sum(
+            kv_read_bytes(self.cfg, c) for c in ctx_lens)
+        flops = b * self.flops_per_token + self.attn_flops_per_ctx \
+            * sum(min(c, 10 ** 9) for c in ctx_lens)
+        t_mem = bytes_moved / (self.hw.chips * self.hw.hbm_bw * self.hw.bw_eff)
+        t_comp = flops / (self.hw.chips * self.hw.peak_flops)
+        return max(t_mem, t_comp)
+
+    # -- derived metrics -------------------------------------------------------
+    def mfu(self, useful_tokens: float, elapsed: float) -> float:
+        """Model-FLOP utilization of a window (the TPU 'Util' analogue)."""
+        if elapsed <= 0:
+            return 0.0
+        util = (self.flops_per_token * useful_tokens
+                / (elapsed * self.hw.chips * self.hw.peak_flops))
+        return float(min(util / self.hw.prefill_eff, 1.0))
+
+    def kv_budget_tokens(self, reserve: float = 0.35) -> int:
+        """How many cached tokens fit in HBM after weights (canSchedule M)."""
+        per_layer, fixed = kv_bytes_per_token(self.cfg)
+        per_tok = sum(pt for pt, _ in per_layer)
+        free = self.hw.chips * self.hw.hbm_bytes * (1 - reserve) \
+            - self.param_bytes
+        if per_tok <= 0:
+            return 10 ** 9                      # state-space: no KV growth
+        return max(int(free / per_tok), 0)

@@ -1,0 +1,349 @@
+"""Continuous-batching serving engine running a real JAX model.
+
+This is the executable counterpart of the simulator: the same scheduler
+protocol and request lifecycle, but tokens actually come out of a model.
+Two decode backends:
+
+- ``slots``  — per-slot contiguous caches via ``model.decode_step`` with
+  per-request positions; works for every assigned architecture (SSM /
+  hybrid / MLA / MoE / enc-dec included).
+- ``paged``  — paged KV pools + the Pallas paged-attention kernel
+  (``repro.kernels.paged_attention``); the vLLM-style production path for
+  uniform dense-GQA stacks (the paper's Llama-2 testbed shape).
+
+Timing uses a dual clock: wall-clock for real measurements and the
+analytic cost model for target-hardware metrics fed back to the
+scheduler (this container's CPU timings are not meaningful for an
+accelerator-bound system).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.core.request import (DECODING, FINISHED, PREFILLING, Request)
+from repro.core.schedulers import SchedulerBase
+from repro.kernels import paged_attention
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.layers import dtype_of, embed, mlp, rmsnorm, unembed
+from repro.models.model import model_stages
+from repro.models.attention import apply_rope
+from repro.models.moe import moe_ffn
+from repro.serving.costmodel import CostModel
+from repro.serving.kv_cache import PagePool, make_pools
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, scheduler: SchedulerBase, *,
+                 params=None, max_slots: int = 8, max_len: int = 512,
+                 kv_budget_tokens: Optional[int] = None,
+                 cost_model: Optional[CostModel] = None,
+                 backend: str = "slots", page_size: int = 16,
+                 seed: int = 0, sample_temp: float = 0.0):
+        self.cfg = cfg
+        self.sched = scheduler
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cm = cost_model or CostModel(cfg)
+        self.kv_budget = kv_budget_tokens or max_slots * max_len
+        self.sample_temp = sample_temp
+        self.rng = jax.random.key(seed)
+        if params is None:
+            params = init_params(jax.random.key(seed + 1), cfg)
+        self.params = params
+        self.backend = backend
+        if backend == "paged":
+            kinds = {k for k, _, _ in model_stages(cfg)}
+            assert kinds == {ATTN} and not cfg.is_encoder_decoder, \
+                "paged backend supports uniform dense-GQA stacks"
+            n_pages = -(-self.kv_budget // page_size)
+            self.pool = PagePool(n_pages, page_size)
+            self.k_pools, self.v_pools = make_pools(
+                cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+                cfg.resolved_head_dim(), dtype_of(cfg))
+        else:
+            self.cache = init_cache(cfg, max_slots, max_len)
+            # inactive slots decode garbage into slot 0 tokens — masked out
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.reserved: Dict[int, int] = {}
+        self.t_model = 0.0            # modeled target-hardware clock
+        self.t_wall0 = time.monotonic()
+        self.finished: List[Request] = []
+        self._prefill_jit: Dict[int, object] = {}
+        self._decode_jit = None
+        self.iterations = 0
+
+    # -- helpers ----------------------------------------------------------------
+    def now(self) -> float:
+        return self.t_model
+
+    def _free_slot(self) -> int:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return -1
+
+    def _reserve_amount(self, req: Request) -> int:
+        pred = req.pred_output_len
+        return int(req.prompt_len + (pred if pred is not None else 128))
+
+    def submit(self, req: Request):
+        if req.prompt_tokens is None:
+            req.prompt_tokens = np.random.default_rng(req.rid).integers(
+                0, self.cfg.vocab_size, req.prompt_len).astype(np.int32)
+        self.sched.on_arrival(req, self.now())
+
+    # -- prefill ------------------------------------------------------------------
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_jit:
+            cfg, max_len = self.cfg, self.max_len
+            if cfg.frontend == "vision_stub":
+                def fn(params, tokens, patches):
+                    return prefill(params, {"tokens": tokens,
+                                            "patch_embeds": patches},
+                                   cfg, max_len)
+            else:
+                def fn(params, tokens):
+                    return prefill(params, {"tokens": tokens}, cfg, max_len)
+
+            self._prefill_jit[plen] = jax.jit(fn)
+        return self._prefill_jit[plen]
+
+    def _admit(self, req: Request, slot: int):
+        tokens = jnp.asarray(req.prompt_tokens[None, :])
+        if self.cfg.frontend == "vision_stub":
+            # stubbed modality frontend: each request carries one image's
+            # worth of precomputed patch embeddings
+            patches = jnp.asarray(np.random.default_rng(req.rid).
+                                  standard_normal((1,
+                                                   self.cfg.n_frontend_tokens,
+                                                   self.cfg.d_model)),
+                                  dtype_of(self.cfg))
+            logits, cache1 = self._prefill_fn(req.prompt_len)(
+                self.params, tokens, patches)
+            req._vlm_prefix = self.cfg.n_frontend_tokens
+        else:
+            logits, cache1 = self._prefill_fn(req.prompt_len)(self.params,
+                                                              tokens)
+            req._vlm_prefix = 0
+        if self.backend == "paged":
+            self.pool.alloc(req.rid, req.prompt_len + 1)
+            # copy contiguous prefill cache into this request's pages
+            sc = cache1["stages"]["stage_0"]
+            pages = self.pool.owned[req.rid]
+            ps = self.pool.page_size
+            k = sc["k"][:, 0]                     # (L, S_c, Hkv, D)
+            v = sc["v"][:, 0]
+            for pi, pg in enumerate(pages):
+                lo = pi * ps
+                if lo >= req.prompt_len:
+                    break
+                hi = min(lo + ps, req.prompt_len)
+                kc, vc = k[:, lo:hi], v[:, lo:hi]
+                if hi - lo < ps:
+                    pad = ((0, 0), (0, ps - (hi - lo)), (0, 0), (0, 0))
+                    kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+                self.k_pools = self.k_pools.at[:, pg].set(kc)
+                self.v_pools = self.v_pools.at[:, pg].set(vc)
+        else:
+            def put(dst, src):
+                return dst.at[:, slot].set(src[:, 0])
+            for i in range(len(model_stages(self.cfg))):
+                key = f"stage_{i}"
+                self.cache["stages"][key] = jax.tree.map(
+                    put, self.cache["stages"][key],
+                    cache1["stages"][key])
+            self.cache["pos"] = self.cache["pos"].at[slot].set(
+                req.prompt_len + req._vlm_prefix)
+        req._next_token = int(jnp.argmax(logits[0]))
+        req._pos = req.prompt_len + req._vlm_prefix
+        req.state = DECODING
+        req.generated = 1                      # prefill emits first token
+        req.first_token_time = self.now()
+        self.slots[slot] = req
+
+    # -- decode -------------------------------------------------------------------
+    def _decode_slots(self, tokens_np):
+        if self._decode_jit is None:
+            cfg = self.cfg
+
+            def fn(params, tokens, cache):
+                return decode_step(params, tokens, cache, cfg)
+
+            self._decode_jit = jax.jit(fn)
+        logits, self.cache = self._decode_jit(
+            self.params, jnp.asarray(tokens_np), self.cache)
+        return logits
+
+    def _decode_paged(self, tokens_np, active_idx):
+        reqs = [self.slots[i] for i in active_idx]
+        ctx = np.array([r._pos for r in reqs], np.int32)
+        for r in reqs:
+            self.pool.extend(r.rid, r._pos, r._pos + 1)
+        width = max(len(self.pool.owned[r.rid]) for r in reqs)
+        bt = self.pool.block_table([r.rid for r in reqs], width)
+        logits, self.k_pools, self.v_pools = _paged_decode_step(
+            self.params, jnp.asarray(tokens_np), jnp.asarray(ctx),
+            jnp.asarray(bt), self.k_pools, self.v_pools, self.cfg,
+            self.pool.page_size)
+        return logits
+
+    # -- main loop -----------------------------------------------------------------
+    def step(self):
+        """One continuous-batching iteration.  Returns #active requests."""
+        now = self.now()
+        # 1. admission
+        admitted = []
+        while True:
+            slot = self._free_slot()
+            if slot < 0:
+                break
+            req = self.sched.pop_next(now)
+            if req is None:
+                break
+            need = self._reserve_amount(req)
+            if (sum(self.reserved.values()) + need > self.kv_budget
+                    and any(s is not None for s in self.slots)):
+                self.sched.queues[req.client].appendleft(req)
+                break
+            self.reserved[req.rid] = need
+            req.admit_time = now
+            req.state = PREFILLING
+            self.sched.on_admit(req, now)
+            self._admit(req, slot)
+            self.sched.on_token(req, now, 1)
+            admitted.append(req)
+
+        active_idx = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active_idx and not admitted:
+            return 0
+
+        # 2. batched decode
+        if self.backend == "paged":
+            tokens = np.array([self.slots[i]._next_token for i in active_idx],
+                              np.int32)
+            logits = self._decode_paged(tokens, active_idx)
+            rows = {si: row for row, si in enumerate(active_idx)}
+        else:
+            tokens = np.zeros(self.max_slots, np.int32)
+            for i in active_idx:
+                tokens[i] = self.slots[i]._next_token
+            logits = self._decode_slots(tokens)
+            rows = {si: si for si in active_idx}
+
+        # 3. modeled clock advance
+        prefill_tokens = sum(r.prompt_len for r in admitted)
+        ctxs = [self.slots[i]._pos for i in active_idx]
+        t_iter = (self.cm.prefill_time(prefill_tokens) if prefill_tokens
+                  else 0.0) + self.cm.decode_step_time(ctxs)
+        if admitted:
+            t_iter += self.cm.hw.batch_overhead
+        self.t_model += max(t_iter, 1e-6)
+        now = self.now()
+
+        # 4. sampling + lifecycle
+        logits_np = np.asarray(logits, np.float32)
+        for si in active_idx:
+            req = self.slots[si]
+            row = logits_np[rows[si]]
+            if self.sample_temp > 0:
+                self.rng, sub = jax.random.split(self.rng)
+                nxt = int(jax.random.categorical(
+                    sub, jnp.asarray(row) / self.sample_temp))
+            else:
+                nxt = int(np.argmax(row))
+            req._next_token = nxt
+            req._pos += 1
+            req.generated += 1
+            self.sched.on_token(req, now, 1)
+            if req.generated >= req.output_len:   # synthetic EOS
+                req.state = FINISHED
+                req.finish_time = now
+                exec_lat = max(now - req.admit_time, 1e-9)
+                tps = (req.prompt_len + req.generated) / exec_lat
+                util = self.cm.mfu(req.prompt_len + req.generated, exec_lat)
+                self.sched.on_complete(req, now, latency=exec_lat, tps=tps,
+                                       util=util)
+                self.finished.append(req)
+                self.reserved.pop(req.rid, None)
+                if self.backend == "paged":
+                    self.pool.free_request(req.rid)
+                self.slots[si] = None
+        self.iterations += 1
+        return len(active_idx)
+
+    def run(self, requests: List[Request], max_iters: int = 100_000):
+        """Submit everything (arrivals honored on the modeled clock) and
+        run to completion."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pi = 0
+        for _ in range(max_iters):
+            while pi < len(pending) and pending[pi].arrival <= self.now():
+                self.submit(pending[pi])
+                pi += 1
+            n = self.step()
+            if n == 0:
+                if pi >= len(pending):
+                    break
+                self.t_model = max(self.t_model, pending[pi].arrival)
+        return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Paged dense-GQA decode step (jit'd; Pallas kernel inside)
+# ---------------------------------------------------------------------------
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"))
+def _paged_decode_step(params, tokens, ctx_lens, block_tables, k_pools,
+                       v_pools, cfg: ModelConfig, page_size: int):
+    """tokens: (B,); ctx_lens: (B,) current lengths (new token appended at
+    position ctx_lens[b]); block_tables: (B, W)."""
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens)[:, None].astype(dtype_of(cfg))
+    pos = ctx_lens
+    stage = params["stages"]["stage_0"]
+    L = cfg.n_layers
+    barange = jnp.arange(B)
+    page_idx = block_tables[barange, pos // page_size]   # (B,)
+    slot_idx = pos % page_size
+    moe_flag = cfg.moe is not None
+
+    def body(carry, lp):
+        x, kp, vp = carry
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)[:, 0]
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+        kp = kp.at[page_idx, slot_idx].set(k)
+        vp = vp.at[page_idx, slot_idx].set(v[:, 0])
+        out = paged_attention(q, kp, vp, block_tables, pos + 1)
+        y = jnp.einsum("bhk,hkd->bd", out, lp["attn"]["wo"])[:, None]
+        x = x + y
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if moe_flag:
+            f, _ = moe_ffn(lp["ffn"], h2, cfg)
+        else:
+            f = mlp(lp["ffn"], h2, cfg.act)
+        x = x + f
+        return (x, kp, vp), None
+
+    def scan_body(carry, layer_inputs):
+        lp, kp_l, vp_l = layer_inputs
+        x = carry
+        (x, kp_l, vp_l), _ = body((x, kp_l, vp_l), lp)
+        return x, (kp_l, vp_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        scan_body, x, (stage, k_pools, v_pools))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, 0])
+    return logits, k_new, v_new

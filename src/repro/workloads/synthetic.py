@@ -1,0 +1,90 @@
+"""The paper's synthetic workload scenarios (§7.2 and Appendix A).
+
+Every generator returns a list of ``Request`` sorted by arrival time.
+Prompts are synthetic: each request carries a small keyword tuple (an
+"intent" plus filler words) from which the predictor extracts features;
+the ground-truth output length is scenario-controlled.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.request import Request
+
+_FILLER = ("please", "could", "explain", "about", "with", "using", "the",
+           "details", "help", "me")
+
+
+def _mk_requests(rng, client, rate, duration, in_len, out_len, *, start=0.0,
+                 poisson=False, rid_offset=0, keywords=("chat",),
+                 weight=1.0):
+    """Deterministic (1/rate spacing) or Poisson arrivals for one client."""
+    reqs = []
+    t = start
+    rid = rid_offset
+    while t < start + duration:
+        if poisson:
+            t += rng.exponential(1.0 / rate)
+        else:
+            t += 1.0 / rate
+        if t >= start + duration:
+            break
+        kw = keywords + tuple(rng.choice(_FILLER, size=2))
+        out = int(max(1, rng.normal(out_len, out_len * 0.05))) \
+            if poisson else out_len
+        reqs.append(Request(rid=rid, client=client, arrival=t,
+                            prompt_len=in_len, output_len=out,
+                            keywords=kw, weight=weight))
+        rid += 1
+    return reqs
+
+
+def balanced(duration=60.0, seed=0):
+    """§7.2.1: client1 2 req/s (100 in / 400 out); client2 1 req/s
+    (100 in / 900 out)."""
+    rng = np.random.default_rng(seed)
+    r1 = _mk_requests(rng, "client1", 2.0, duration, 100, 400,
+                      keywords=("chat",))
+    r2 = _mk_requests(rng, "client2", 1.0, duration, 100, 900,
+                      rid_offset=10_000, keywords=("story",))
+    return sorted(r1 + r2, key=lambda r: r.arrival)
+
+
+def stochastic(duration=60.0, seed=0):
+    """§7.2.2: Poisson arrivals; client1 16 req/s prefill-heavy (512/32);
+    client2 3 req/s decode-heavy (32/512)."""
+    rng = np.random.default_rng(seed)
+    r1 = _mk_requests(rng, "client1", 16.0, duration, 512, 32, poisson=True,
+                      keywords=("summarize",))
+    r2 = _mk_requests(rng, "client2", 3.0, duration, 32, 512, poisson=True,
+                      rid_offset=10_000, keywords=("story",))
+    return sorted(r1 + r2, key=lambda r: r.arrival)
+
+
+def overload(duration=60.0, seed=0):
+    """Appendix A: constant extreme overload; client1 20 req/s (20/180);
+    client2 2 req/s (200/1800)."""
+    rng = np.random.default_rng(seed)
+    r1 = _mk_requests(rng, "client1", 20.0, duration, 20, 180,
+                      keywords=("qa",))
+    r2 = _mk_requests(rng, "client2", 2.0, duration, 200, 1800,
+                      rid_offset=100_000, keywords=("story",))
+    return sorted(r1 + r2, key=lambda r: r.arrival)
+
+
+def dynamic(duration=60.0, seed=0):
+    """Appendix A: client1 constant 1 req/s (100/400); client2 steps from
+    1 req/s to 4 req/s halfway."""
+    rng = np.random.default_rng(seed)
+    r1 = _mk_requests(rng, "client1", 1.0, duration, 100, 400,
+                      keywords=("chat",))
+    r2a = _mk_requests(rng, "client2", 1.0, duration / 2, 100, 400,
+                       rid_offset=10_000, keywords=("chat",))
+    r2b = _mk_requests(rng, "client2", 4.0, duration / 2, 100, 400,
+                       start=duration / 2, rid_offset=20_000,
+                       keywords=("chat",))
+    return sorted(r1 + r2a + r2b, key=lambda r: r.arrival)
+
+
+SCENARIOS = {"balanced": balanced, "stochastic": stochastic,
+             "overload": overload, "dynamic": dynamic}

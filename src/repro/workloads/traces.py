@@ -1,0 +1,106 @@
+"""LMSYS-Chat-1M / ShareGPT-like synthetic traces.
+
+The raw datasets are not available offline; these generators match the
+statistics the paper relies on (DESIGN.md §8): lognormal output lengths
+whose 33rd/66th percentiles sit near the paper's MoPE regime boundaries
+(53 / 210 tokens), heavy-tailed prompt lengths and per-client Poisson
+arrivals with heterogeneous rates.
+
+Output length is a *learnable* function of the prompt (intent keyword +
+prompt length + noise) so the MoPE router/experts have real structure to
+capture — mirroring how output length correlates with prompt semantics
+in the real traces.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.request import Request
+
+# intent -> (base output length, prompt-length exponent, noise sigma)
+INTENTS = {
+    "qa":        (26.0, 0.10, 0.45),
+    "chat":      (100.0, 0.15, 0.55),
+    "summarize": (60.0, 0.55, 0.40),
+    "translate": (55.0, 0.90, 0.25),
+    "code":      (360.0, 0.25, 0.60),
+    "story":     (800.0, 0.10, 0.50),
+}
+INTENT_NAMES = tuple(INTENTS)
+# LMSYS-ish intent mix (chat-dominated, long-form tail); tuned so the
+# output-length 33rd/66th percentiles land near the paper's 53/210 cuts
+INTENT_PROBS = np.array([0.20, 0.28, 0.11, 0.07, 0.19, 0.15])
+
+_FILLER = ("the", "a", "of", "to", "in", "and", "for", "with", "on", "is",
+           "how", "what", "why", "when", "best", "new", "my", "your")
+
+
+def true_output_len(intent: str, prompt_len: int, rng) -> int:
+    base, gamma, sigma = INTENTS[intent]
+    mean = base * (prompt_len / 128.0) ** gamma
+    out = mean * rng.lognormal(0.0, sigma)
+    return int(np.clip(out, 1, 4096))
+
+
+def sample_prompt(rng):
+    """Returns (keywords, prompt_len)."""
+    intent = str(rng.choice(INTENT_NAMES, p=INTENT_PROBS))
+    prompt_len = int(np.clip(rng.lognormal(4.45, 0.95), 4, 3500))
+    n_fill = int(rng.integers(2, 6))
+    kw = (intent,) + tuple(rng.choice(_FILLER, size=n_fill))
+    return kw, prompt_len, intent
+
+
+def corpus(n: int, seed: int = 0):
+    """(keywords, prompt_len, output_len) triples for predictor training."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        kw, plen, intent = sample_prompt(rng)
+        out.append((kw, plen, true_output_len(intent, plen, rng)))
+    return out
+
+
+def lmsys_like(n_clients=27, duration=120.0, total_rate=8.0, seed=0):
+    """27 heterogeneous clients (paper Appendix B uses 27 from the LMSYS
+    trace), zipf-distributed request rates, Poisson arrivals."""
+    rng = np.random.default_rng(seed)
+    shares = 1.0 / np.arange(1, n_clients + 1) ** 0.8
+    shares /= shares.sum()
+    reqs = []
+    rid = 0
+    for ci in range(n_clients):
+        rate = float(total_rate * shares[ci])
+        t = rng.exponential(1.0 / rate)
+        while t < duration:
+            kw, plen, intent = sample_prompt(rng)
+            reqs.append(Request(
+                rid=rid, client=f"client{ci}", arrival=float(t),
+                prompt_len=plen,
+                output_len=true_output_len(intent, plen, rng),
+                keywords=kw))
+            rid += 1
+            t += rng.exponential(1.0 / rate)
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def sharegpt_like(n_clients=8, n_per_client=160, rate_per_client=3.5,
+                  seed=0):
+    """§7.3.2 setup: fixed per-client Poisson rate, fixed request count.
+    ShareGPT skews longer than LMSYS — shift the prompt distribution up."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    rid = 0
+    for ci in range(n_clients):
+        t = 0.0
+        for _ in range(n_per_client):
+            t += rng.exponential(1.0 / rate_per_client)
+            kw, plen, intent = sample_prompt(rng)
+            plen = int(np.clip(plen * 1.6, 4, 3500))
+            reqs.append(Request(
+                rid=rid, client=f"client{ci}", arrival=float(t),
+                prompt_len=plen,
+                output_len=true_output_len(intent, plen, rng),
+                keywords=kw))
+            rid += 1
+    return sorted(reqs, key=lambda r: r.arrival)

@@ -1,0 +1,83 @@
+"""Config registry + stage grouping + derived quantities."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, SMOKE_FACTORIES,
+                           get_config, list_archs)
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA2, RGLRU
+from repro.models import long_context_variant
+from repro.models.model import model_stages
+
+EXPECTED_PARAMS = {  # coarse sanity on n_params() (±35%)
+    "deepseek-7b": 7e9, "deepseek-moe-16b": 16e9, "granite-3-2b": 2.6e9,
+    "starcoder2-7b": 7e9, "minicpm3-4b": 4e9, "mixtral-8x7b": 47e9,
+    "internvl2-76b": 70e9, "mamba2-2.7b": 2.7e9, "recurrentgemma-2b": 2.7e9,
+    "llama2-7b": 7e9,
+}
+
+
+def test_all_assigned_archs_registered():
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        assert cfg.name == a
+        assert cfg.source
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(set(get_config(a).arch_type for a in ASSIGNED_ARCHS)) == 6
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+    assert INPUT_SHAPES["decode_32k"].mode == "decode"
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS))
+def test_param_counts(arch):
+    n = get_config(arch).n_params()
+    exp = EXPECTED_PARAMS[arch]
+    assert 0.65 * exp < n < 1.35 * exp, f"{arch}: {n:.2e} vs {exp:.2e}"
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.n_active_params() < 0.4 * cfg.n_params()
+    dense = get_config("deepseek-7b")
+    assert dense.n_active_params() == dense.n_params()
+
+
+def test_stage_grouping_hybrid():
+    cfg = get_config("recurrentgemma-2b")
+    stages = model_stages(cfg)
+    # (rglru, rglru, attn_local) repeating over 26 layers
+    assert stages[0] == (RGLRU, False, 2)
+    assert stages[1] == (ATTN_LOCAL, False, 1)
+    assert sum(c for _, _, c in stages) == 26
+
+
+def test_stage_grouping_moe_first_dense():
+    cfg = get_config("deepseek-moe-16b")
+    stages = model_stages(cfg)
+    assert stages[0] == (ATTN, False, 1)      # first layer dense FFN
+    assert stages[1] == (ATTN, True, 27)
+
+
+def test_long_context_variant():
+    dense = get_config("deepseek-7b")
+    lc = long_context_variant(dense)
+    assert lc.attn_kind == ATTN_LOCAL and lc.window == 4096
+    ssm = get_config("mamba2-2.7b")
+    assert long_context_variant(ssm) is ssm        # natively sub-quadratic
+    mix = get_config("mixtral-8x7b")
+    assert long_context_variant(mix).window == 4096  # native SWA
+
+
+def test_smoke_factories_are_reduced():
+    for name, fac in SMOKE_FACTORIES.items():
+        cfg = fac()
+        assert cfg.n_layers <= 3, name
+        assert cfg.d_model <= 512, name
+        if cfg.moe:
+            assert cfg.moe.n_experts <= 4, name
+
+
+def test_registry_lists():
+    assert set(ASSIGNED_ARCHS) <= set(list_archs())

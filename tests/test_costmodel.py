@@ -1,0 +1,70 @@
+"""Analytic cost model: the paper's Figure-2 qualitative shapes must
+emerge (monotone latency, non-monotone throughput, KV-dependent decode)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.costmodel import (A100_80G, CostModel, kv_bytes_per_token,
+                                     kv_read_bytes)
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def test_latency_monotone_in_tokens(cm):
+    """Fig 2a: per-request latency grows with output length."""
+    lats = []
+    for out in (64, 256, 1024, 2048):
+        t = cm.prefill_time(128) + sum(
+            cm.decode_step_time([128 + i] * 8) / 8 for i in range(out))
+        lats.append(t)
+    assert all(b > a for a, b in zip(lats, lats[1:]))
+
+
+def test_throughput_non_monotone(cm):
+    """Fig 2b: per-request TPS rises (overhead amortization) then falls
+    (KV reads dominate)."""
+    tps = []
+    for out in (32, 256, 1024, 8192):
+        stride = max(out // 64, 1)
+        decode = sum(stride * cm.decode_step_time([out + i] * 8) / 8
+                     for i in range(0, out, stride))
+        lat = cm.hw.batch_overhead + cm.prefill_time(out) + decode
+        tps.append(2 * out / lat)
+    assert tps[1] > tps[0]                 # rising edge
+    assert tps[-1] < max(tps)              # falling tail
+
+
+def test_decode_memory_bound(cm):
+    """Decode time grows with context (KV reads), compute tiny."""
+    t1 = cm.decode_step_time([1024] * 16)
+    t2 = cm.decode_step_time([16384] * 16)
+    assert t2 > 1.5 * t1
+
+
+def test_arch_heterogeneous_kv_costs():
+    """The cost heterogeneity Equinox exploits: MLA < GQA < MHA KV cost;
+    SSM constant."""
+    mha = kv_read_bytes(get_config("llama2-7b"), 8192)       # kv=32
+    gqa = kv_read_bytes(get_config("granite-3-2b"), 8192)    # kv=8
+    mla = kv_read_bytes(get_config("minicpm3-4b"), 8192)     # latent
+    ssm_1k = kv_read_bytes(get_config("mamba2-2.7b"), 1024)
+    ssm_8k = kv_read_bytes(get_config("mamba2-2.7b"), 8192)
+    assert mha > gqa > mla
+    assert ssm_1k == ssm_8k                # constant state
+
+
+def test_sliding_window_caps_kv():
+    mix = get_config("mixtral-8x7b")       # SWA 4096
+    assert kv_read_bytes(mix, 100_000) == kv_read_bytes(mix, 4096)
+
+
+def test_kv_budget_positive_for_serving():
+    cm = CostModel.for_serving(get_config("llama2-7b"))
+    assert cm.kv_budget_tokens() >= 50_000
+
+
+def test_mfu_bounded(cm):
+    assert 0 <= cm.mfu(1000, 1.0) <= 1.0

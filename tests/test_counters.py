@@ -1,0 +1,86 @@
+"""UFC/RFC/HF counter math: paper formulas, numpy<->jnp equivalence
+(property-based), device-resident batch assembly invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import counters as C
+
+floats = st.floats(1e-3, 1e4, allow_nan=False, allow_infinity=False)
+
+
+def test_ufc_formula_paper_example():
+    # §3.1: UFC += ω (T_in + 4 T_out) / (1 + δ(wait + predict))
+    inc = C.ufc_increment(100, 400, wait=2.0, predict_time=3.0,
+                          omega=1.0, delta=0.1)
+    assert abs(inc - (100 + 1600) / 1.5) < 1e-9
+
+
+def test_rfc_formula():
+    assert C.rfc_increment(tps=55.0, util=0.9, omega=2.0) == 2.0 * 55.0 * 0.9
+
+
+def test_hf_min_selection_figure5():
+    """Figure 5: VTC would pick user0 (fewer tokens) but HF picks the
+    latency-underserved user1 when α > β."""
+    ufc = np.array([700.0, 1000.0])      # user1 has more weighted tokens...
+    rfc = np.array([1000.0, 200.0])      # ...but far less efficiency credit
+    pick = C.select_min_hf(ufc, rfc, np.array([True, True]),
+                           alpha=0.7, beta=0.3)
+    assert pick == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(floats, floats, floats, floats,
+       st.floats(0.1, 10.0), st.floats(0.0, 1.0))
+def test_numpy_jax_equivalence(tin, tout, wait, ptime, omega, delta):
+    a = C.ufc_increment(tin, tout, wait, ptime, omega, delta)
+    ufc = jnp.zeros(3)
+    b = float(C.ufc_update_jax(ufc, 1, tin, tout, wait, ptime, omega,
+                               delta)[1])
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(floats, min_size=2, max_size=8),
+       st.lists(floats, min_size=2, max_size=8))
+def test_hf_scores_equivalence(ufc, rfc):
+    n = min(len(ufc), len(rfc))
+    u, r = np.array(ufc[:n]) + 1e-3, np.array(rfc[:n]) + 1e-3
+    h_np = C.hf_scores(u, r)
+    h_jx = np.asarray(C.hf_scores_jax(jnp.asarray(u), jnp.asarray(r)))
+    np.testing.assert_allclose(h_np, h_jx, rtol=1e-5)
+
+
+def test_select_respects_active_mask():
+    ufc = np.array([1.0, 5.0, 10.0])
+    rfc = np.zeros(3)
+    assert C.select_min_hf(ufc, rfc, np.array([False, True, True])) == 1
+    assert C.select_min_hf(ufc, rfc, np.array([False, False, False])) == -1
+
+
+def test_build_batch_jax_constraints():
+    """Device-resident admission respects L_b and the KV budget."""
+    ufc = jnp.array([0.0, 0.0, 0.0])
+    rfc = jnp.zeros(3)
+    counts = jnp.array([10, 10, 10], jnp.int32)
+    kv_costs = jnp.array([100.0, 100.0, 100.0])
+    admitted, kv = C.build_batch_jax(ufc, rfc, counts, kv_costs,
+                                     kv_budget=450.0, max_batch=16)
+    assert int(admitted.sum()) == 4          # 4 × 100 <= 450 < 5 × 100
+    assert float(kv) <= 450.0
+    admitted, _ = C.build_batch_jax(ufc, rfc, counts, kv_costs,
+                                    kv_budget=1e9, max_batch=5)
+    assert int(admitted.sum()) == 5          # L_b binds
+
+
+def test_build_batch_fairness():
+    """Greedy argmin-HF rotates across equal clients."""
+    ufc = jnp.zeros(3)
+    rfc = jnp.zeros(3)
+    counts = jnp.array([10, 10, 10], jnp.int32)
+    kv_costs = jnp.array([10.0, 10.0, 10.0])
+    admitted, _ = C.build_batch_jax(ufc, rfc, counts, kv_costs,
+                                    kv_budget=1e9, max_batch=9)
+    assert np.asarray(admitted).tolist() == [3, 3, 3]

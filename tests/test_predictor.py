@@ -1,0 +1,90 @@
+"""MoPE: router accuracy, expert specialization beats a single proxy,
+metric-map online calibration (paper §6 claims, scaled down)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Request
+from repro.predictor import MoPE, Oracle, SingleProxy, l1_error, \
+    router_accuracy, train_router
+from repro.serving.costmodel import CostModel
+from repro.workloads import corpus
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"))
+
+
+@pytest.fixture(scope="module")
+def data():
+    return corpus(6000, seed=0), corpus(1500, seed=7)
+
+
+def test_router_accuracy(data):
+    train, test = data
+    router = train_router(train, n_experts=3)
+    acc = router_accuracy(router, test)
+    assert acc > 0.70                      # paper peaks at ~0.80
+    assert len(router.boundaries) == 2
+    assert router.boundaries[0] < router.boundaries[1]
+
+
+def test_router_boundaries_near_paper(data):
+    """33rd/66th output-length percentiles should sit near the paper's
+    53/210 LMSYS cuts (workload generator is tuned for this)."""
+    train, _ = data
+    router = train_router(train, n_experts=3)
+    b1, b2 = router.boundaries
+    assert 30 < b1 < 80
+    assert 130 < b2 < 300
+
+
+def test_mope_beats_single_proxy(cm, data):
+    train, test = data
+    single = SingleProxy(cm, train, epochs=30, calibrate=False)
+    mope = MoPE(cm, train, n_experts=3, epochs=30, calibrate=False)
+    e_single = l1_error(single, test)
+    e_mope = l1_error(mope, test)
+    assert e_mope < 0.9 * e_single         # paper: 80 -> 33
+    assert l1_error(Oracle(cm), test) == 0.0
+
+
+def test_predict_fills_all_four_metrics(cm, data):
+    train, _ = data
+    mope = MoPE(cm, train, epochs=5)
+    req = Request(rid=0, client="c", arrival=0.0, prompt_len=64,
+                  output_len=100, keywords=("chat",))
+    mope.predict(req)
+    assert req.pred_output_len and req.pred_output_len > 0
+    assert req.pred_latency and req.pred_latency > 0
+    assert req.pred_tps and req.pred_tps > 0
+    assert req.pred_util is not None and 0 <= req.pred_util <= 1
+
+
+def test_metric_map_calibrates_toward_observed(cm, data):
+    train, _ = data
+    mope = MoPE(cm, train, epochs=5)
+    req = Request(rid=0, client="c", arrival=0.0, prompt_len=64,
+                  output_len=100, keywords=("chat",))
+    mope.predict(req)
+    before = mope.metric_map.predict(64, 100)[0]
+    target = before * 5.0
+    for _ in range(50):
+        mope.observe(req, latency=target, tps=10.0, util=0.5)
+    after = mope.metric_map.predict(64, 100)[0]
+    assert abs(after - target) < abs(before - target)
+
+
+def test_online_bias_calibration(cm, data):
+    """Systematic misprediction shrinks via the live bias EMA."""
+    train, _ = data
+    mope = MoPE(cm, train, epochs=5, calibrate=True)
+    req = Request(rid=0, client="c", arrival=0.0, prompt_len=64,
+                  output_len=400, keywords=("qa",))   # qa predicts ~30
+    first = mope.predict(req).pred_output_len
+    for _ in range(100):
+        mope.predict(req)
+        mope.observe(req, latency=1.0, tps=10.0, util=0.5)
+    later = mope.predict(req).pred_output_len
+    assert abs(later - 400) < abs(first - 400)

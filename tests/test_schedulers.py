@@ -1,0 +1,114 @@
+"""Scheduler policies: ordering, lifts, quotas, VTC-limit equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import HFParams, Request, make_scheduler
+from repro.core.schedulers import FCFS, RPM, VTC, Equinox
+from repro.predictor.mope import BasePredictor
+from repro.serving.costmodel import CostModel
+from repro.configs import get_config
+
+
+class ConstPredictor(BasePredictor):
+    """Deterministic stub: predicts a constant output length."""
+
+    def __init__(self, const=100.0):
+        cm = CostModel(get_config("llama2-7b"))
+        super().__init__(cm, calibrate=False)
+        self.const = const
+
+    def predict_tokens(self, req):
+        return self.const
+
+
+def _req(rid, client, arrival, p=10, o=20, kw=("chat",)):
+    return Request(rid=rid, client=client, arrival=arrival, prompt_len=p,
+                   output_len=o, keywords=kw)
+
+
+def test_fcfs_orders_by_arrival():
+    s = FCFS()
+    s.on_arrival(_req(1, "b", 2.0), 2.0)
+    s.on_arrival(_req(0, "a", 1.0), 2.0)
+    assert s.pop_next(3.0).rid == 0
+    assert s.pop_next(3.0).rid == 1
+    assert s.pop_next(3.0) is None
+
+
+def test_rpm_quota_blocks():
+    s = RPM(quota_per_min=2)
+    for i in range(3):
+        s.on_arrival(_req(i, "a", 0.0), 0.0)
+    assert s.pop_next(0.0).rid == 0
+    assert s.pop_next(0.0).rid == 1
+    assert s.pop_next(0.0) is None            # quota exhausted
+    assert s.pop_next(61.0).rid == 2          # window rolled
+
+
+def test_vtc_min_counter_selection():
+    s = VTC()
+    s.on_arrival(_req(0, "a", 0.0, p=100), 0.0)
+    s.on_arrival(_req(1, "b", 0.0, p=10), 0.0)
+    r = s.pop_next(0.0)
+    s.on_admit(r, 0.0)                        # client a charged 100
+    s.on_arrival(_req(2, "a", 0.1, p=10), 0.1)
+    assert s.pop_next(0.2).client == "b"      # b has lower counter
+
+
+def test_vtc_lift_on_reactivation():
+    """An idle client must not bank credit (VTC no-gaming lift)."""
+    s = VTC()
+    s.on_arrival(_req(0, "a", 0.0, p=50), 0.0)
+    s.on_admit(s.pop_next(0.0), 0.0)
+    s.counter["a"] = 1000.0
+    s.on_arrival(_req(1, "late", 100.0), 100.0)
+    assert s.counter["late"] >= 1000.0
+
+
+def test_equinox_reduces_to_vtc_in_limit():
+    """δ=0, β=0, oracle predictions, upfront charging ⇒ identical
+    admission order to predictive VTC."""
+
+    class OraclePred(ConstPredictor):
+        def predict_tokens(self, req):
+            return float(req.output_len)
+
+    p = HFParams(alpha=1.0, beta=0.0, delta=0.0, charging="upfront")
+    eq = Equinox(OraclePred(), params=p)
+    vtc = VTC(predictor=OraclePred())
+    reqs = [_req(i, "ab"[i % 2], 0.1 * i, p=10 + 7 * i, o=5 + 11 * i)
+            for i in range(12)]
+    order_eq, order_vtc = [], []
+    for sched, order in ((eq, order_eq), (vtc, order_vtc)):
+        for r in reqs:
+            import copy
+            sched.on_arrival(copy.deepcopy(r), r.arrival)
+        now = 2.0
+        while True:
+            r = sched.pop_next(now)
+            if r is None:
+                break
+            sched.on_admit(r, now)
+            order.append(r.rid)
+    assert order_eq == order_vtc
+
+
+def test_equinox_work_conserving():
+    eq = make_scheduler("equinox", predictor=ConstPredictor())
+    assert eq.pop_next(0.0) is None
+    eq.on_arrival(_req(0, "a", 0.0), 0.0)
+    assert eq.pop_next(0.0).rid == 0
+
+
+def test_equinox_prefers_underserved():
+    eq = make_scheduler("equinox", predictor=ConstPredictor())
+    for i in range(4):
+        eq.on_arrival(_req(i, "heavy", 0.0, p=1000, o=500), 0.0)
+    eq.on_arrival(_req(10, "light", 0.0, p=10, o=10), 0.0)
+    # serve two heavy requests directly -> heavy accumulates UFC
+    for _ in range(2):
+        r = eq.queues["heavy"].popleft()
+        eq.predictor.predict(r)
+        eq.on_admit(r, 0.0)
+        eq.on_token(r, 0.0, r.output_len)
+    assert eq.pop_next(0.0).client == "light"

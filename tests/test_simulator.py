@@ -1,0 +1,85 @@
+"""Discrete-event simulator invariants + scheduler-differentiation."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (HFObserver, SimConfig, Simulator, make_scheduler,
+                        summarize)
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import balanced, overload, stochastic
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def run(cm, sched_name, wl, simcfg=None, predictor=None, max_time=None):
+    sched = make_scheduler(sched_name, predictor=predictor)
+    sim = Simulator(cm, sched, simcfg or SimConfig(max_batch=32))
+    return sim.run(copy.deepcopy(wl), max_time=max_time)
+
+
+def test_all_requests_finish(cm):
+    wl = balanced(duration=10.0)
+    res = run(cm, "fcfs", wl)
+    assert all(r.state == "finished" for r in res.requests)
+    assert all(r.generated == r.output_len for r in res.requests)
+
+
+def test_clock_monotone_and_service_conserved(cm):
+    wl = balanced(duration=10.0)
+    res = run(cm, "fcfs", wl)
+    ts = np.array(res.timeline.t)
+    assert (np.diff(ts) > 0).all()
+    # accumulated weighted service equals sum of request service
+    total = sum(res.timeline.service[-1].values())
+    expect = sum(r.prompt_len + 4.0 * r.generated for r in res.requests)
+    np.testing.assert_allclose(total, expect, rtol=1e-6)
+
+
+def test_ttft_nonnegative_and_ordering(cm):
+    wl = stochastic(duration=8.0)
+    res = run(cm, "fcfs", wl)
+    ttfts = res.ttfts()
+    assert (ttfts >= 0).all()
+    lats = res.latencies()
+    assert (lats + 1e-9 >= ttfts).all()
+
+
+def test_fcfs_least_fair_under_contention(cm):
+    """FCFS lets the aggressive client monopolize (paper §1)."""
+    wl = overload(duration=30.0)
+    diffs = {}
+    for name in ("fcfs", "vtc"):
+        res = run(cm, name, wl, max_time=30.0)
+        s = summarize(res, clients=["client1", "client2"])
+        diffs[name] = s["service_diff"]["avg"]
+    assert diffs["vtc"] < diffs["fcfs"]
+
+
+def test_kv_budget_limits_batch(cm):
+    wl = balanced(duration=5.0)
+    res = run(cm, "fcfs", wl,
+              SimConfig(max_batch=64, kv_budget_tokens=1500))
+    # reservation = prompt(100) + default_reserve(256) = 356 -> ≤4 fit
+    assert max(res.timeline.batch) <= 4
+
+
+def test_observer_tracks_all_clients(cm):
+    wl = balanced(duration=5.0)
+    sched = make_scheduler("fcfs")
+    obs = HFObserver()
+    sim = Simulator(cm, sched, SimConfig(max_batch=32), observer=obs)
+    sim.run(copy.deepcopy(wl))
+    assert set(obs.hf()) == {"client1", "client2"}
+    assert 0.0 <= obs.jain_index() <= 1.0
+
+
+def test_stall_free_caps_prefill(cm):
+    """Chunked prefill bounds per-iteration prefill tokens."""
+    wl = stochastic(duration=4.0)
+    res = run(cm, "fcfs", wl, SimConfig(max_batch=32, prefill_chunk=256))
+    assert max(res.timeline.tokens) <= 256 + 32  # chunk + decode batch

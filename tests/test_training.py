@@ -1,0 +1,84 @@
+"""Training substrate: optimizer math, learning on structured data,
+checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SMOKE_FACTORIES
+from repro.training import AdamW, TrainConfig, cosine_schedule, train
+from repro.training import checkpoint as ckpt
+from repro.training.data import MarkovTokenStream, batches
+
+
+def test_adam_matches_reference():
+    """One AdamW step against hand-computed values."""
+    opt = AdamW(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    st = opt.init(p)
+    p2, st2 = opt.update(g, st, p)
+    mu = 0.1 * np.array([0.5, -1.0])
+    nu = 0.001 * np.array([0.25, 1.0])
+    upd = (mu / 0.1) / (np.sqrt(nu / 0.001) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.array([1.0, 2.0]) - 0.1 * upd, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_grad_clip():
+    opt = AdamW(lr=0.1, grad_clip=1.0)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    st = opt.init(p)
+    _, st2 = opt.update(g, st, p)
+    # clipped gradient has global norm 1
+    np.testing.assert_allclose(float(jnp.linalg.norm(st2["mu"]["w"] / 0.1)),
+                               1.0, rtol=1e-4)
+
+
+def test_cosine_schedule():
+    s = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    assert float(s(jnp.array(5))) < 1.0
+    np.testing.assert_allclose(float(s(jnp.array(10))), 1.0, rtol=1e-5)
+    assert float(s(jnp.array(100))) < 0.2
+
+
+def test_markov_stream_learnable():
+    stream = MarkovTokenStream(64, seed=0)
+    x = stream.sample(4, 128, seed=1)
+    assert x.shape == (4, 129)
+    assert x.min() >= 0 and x.max() < 64
+
+
+def test_training_loss_decreases():
+    """~0.5M-param model on Markov data: loss must drop well below the
+    unigram entropy within 60 steps (end-to-end trainer)."""
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    logs = []
+    tc = TrainConfig(batch=8, seq_len=64, steps=60, peak_lr=3e-3,
+                     warmup=5, log_every=10)
+    _, losses = train(cfg, tc, log=lambda m: logs.append(m))
+    first, last = losses[0][1], losses[-1][1]
+    assert last < first - 0.5, (first, last)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "c": jnp.array([1, 2], jnp.int32)}
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt.save(path, tree)
+    back = ckpt.restore(path, like=tree)
+    assert jax.tree.all(jax.tree.map(
+        lambda x, y: bool(jnp.array_equal(x, y)), tree, back))
+
+
+def test_data_pipeline_batches():
+    bs = list(batches(32, batch=2, seq_len=16, n_steps=3))
+    assert len(bs) == 3
+    for b in bs:
+        assert b["tokens"].shape == (2, 16)
+        assert b["labels"].shape == (2, 16)
+        # labels are tokens shifted by one
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

@@ -1,0 +1,72 @@
+"""Workload generators: paper scenario parameters + trace statistics."""
+import numpy as np
+
+from repro.workloads import (balanced, corpus, dynamic, lmsys_like,
+                             overload, sharegpt_like, stochastic)
+
+
+def test_balanced_parameters():
+    reqs = balanced(duration=30.0)
+    c1 = [r for r in reqs if r.client == "client1"]
+    c2 = [r for r in reqs if r.client == "client2"]
+    assert abs(len(c1) / 30.0 - 2.0) < 0.2         # 2 req/s
+    assert abs(len(c2) / 30.0 - 1.0) < 0.2
+    assert all(r.prompt_len == 100 for r in c1)
+    assert all(r.output_len == 400 for r in c1)
+    assert all(r.output_len == 900 for r in c2)
+
+
+def test_stochastic_rates():
+    reqs = stochastic(duration=60.0, seed=1)
+    c1 = [r for r in reqs if r.client == "client1"]
+    c2 = [r for r in reqs if r.client == "client2"]
+    assert abs(len(c1) / 60.0 - 16.0) < 2.5        # Poisson 16 req/s
+    assert abs(len(c2) / 60.0 - 3.0) < 1.5
+    assert c1[0].prompt_len == 512                 # prefill heavy
+    assert c2[0].prompt_len == 32                  # decode heavy
+
+
+def test_overload_demand_exceeds_capacity():
+    reqs = overload(duration=10.0)
+    offered = sum(r.prompt_len + 4 * r.output_len for r in reqs) / 10.0
+    assert offered > 20_000                        # far beyond one GPU
+
+
+def test_dynamic_rate_step():
+    reqs = dynamic(duration=60.0)
+    c2 = [r for r in reqs if r.client == "client2"]
+    first = sum(1 for r in c2 if r.arrival < 30.0)
+    second = sum(1 for r in c2 if r.arrival >= 30.0)
+    assert second > 2.5 * first                    # 1 -> 4 req/s
+
+
+def test_corpus_percentiles_near_paper():
+    outs = np.array([o for _, _, o in corpus(12_000, seed=0)])
+    p33, p66 = np.percentile(outs, [33, 66])
+    assert 35 < p33 < 80                           # paper: 53
+    assert 120 < p66 < 300                         # paper: 210
+
+
+def test_corpus_learnable_structure():
+    """Same intent+length must have correlated outputs (else MoPE can't
+    learn anything)."""
+    data = corpus(4000, seed=3)
+    qa = [o for kw, pl, o in data if kw[0] == "qa"]
+    story = [o for kw, pl, o in data if kw[0] == "story"]
+    assert np.median(story) > 8 * np.median(qa)
+
+
+def test_lmsys_like_clients():
+    reqs = lmsys_like(n_clients=27, duration=20.0, seed=0)
+    assert len({r.client for r in reqs}) == 27
+    arr = np.array([r.arrival for r in reqs])
+    assert (np.diff(arr) >= 0).all()
+
+
+def test_sharegpt_like_counts():
+    reqs = sharegpt_like(n_clients=4, n_per_client=50)
+    assert len(reqs) == 200
+    per = {c: 0 for c in {r.client for r in reqs}}
+    for r in reqs:
+        per[r.client] += 1
+    assert all(v == 50 for v in per.values())
