@@ -1,0 +1,62 @@
+"""Cluster scaling: 1→8 replicas on a ShareGPT-like trace (DESIGN.md §7).
+
+Sweeps the replica count and, at the widest point, the routing policy,
+with per-client fairness counters enforced globally across the fleet:
+throughput should scale with replicas, p50 TTFT should collapse once the
+offered load fits, and Jain's index over the shared per-client counters
+should stay flat (adding replicas must not open a gaming loophole)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import CM, predictor, row
+from repro.core import SimConfig
+from repro.serving.cluster import make_sim_cluster
+from repro.workloads import sharegpt_like
+
+SIMCFG = SimConfig(max_batch=16, kv_budget_tokens=16000)
+
+
+def _trace(quick):
+    return sharegpt_like(n_clients=8,
+                         n_per_client=30 if quick else 90,
+                         rate_per_client=3.5)
+
+
+def _one(n_replicas, policy, wl, sched="vtc", pred=None, max_time=240.0):
+    cl = make_sim_cluster(n_replicas, CM, scheduler=sched, predictor=pred,
+                          policy=policy, sim_cfg=SIMCFG)
+    t0 = time.monotonic()
+    res = cl.run(list(wl), max_time=max_time)
+    return res.summary(), time.monotonic() - t0
+
+
+def run(quick=False):
+    out = []
+    # replica sweep at fixed policy (the headline scaling curve)
+    for n in (1, 2, 4, 8):
+        wl = _trace(quick)
+        s, wall = _one(n, "least_kv", wl)
+        out.append(row(
+            f"cluster/replicas={n}", wall,
+            f"tput={s['throughput_tok_s']:.0f}tok/s "
+            f"p50_ttft={s['p50_ttft']:.2f}s jain={s['jain']:.3f} "
+            f"fin={s['finished']}/{s['total']}"))
+    # routing-policy sweep at 4 replicas
+    for policy in ("round_robin", "least_kv", "min_ttft"):
+        wl = _trace(quick)
+        s, wall = _one(4, policy, wl)
+        spread = max(s["per_replica"]) - min(s["per_replica"])
+        out.append(row(
+            f"cluster/policy={policy}", wall,
+            f"tput={s['throughput_tok_s']:.0f}tok/s "
+            f"p50_ttft={s['p50_ttft']:.2f}s spread={spread}"))
+    # equinox end-to-end on the cluster (predictor shared fleet-wide)
+    wl = _trace(quick)
+    s, wall = _one(4, "least_kv", wl, sched="equinox",
+                   pred=predictor("mope"))
+    out.append(row(
+        "cluster/equinox-4rep", wall,
+        f"tput={s['throughput_tok_s']:.0f}tok/s "
+        f"p50_ttft={s['p50_ttft']:.2f}s jain={s['jain']:.3f}"))
+    return out

@@ -1,0 +1,53 @@
+"""Multi-replica fair cluster serving in ~70 lines (DESIGN.md §7).
+
+Spins up a 4-replica simulated cluster (A100 cost model), shares the
+per-client VTC counters across replicas, and shows the no-gaming
+property: a client that sprays 4x the traffic over every replica is
+still held to an equal weighted-service share while a well-behaved
+client stays backlogged.
+
+    PYTHONPATH=src python examples/cluster_serving.py
+"""
+from repro.configs import get_config
+from repro.core import Request, SimConfig
+from repro.serving.cluster import make_sim_cluster
+from repro.serving.costmodel import A100_80G, CostModel
+
+
+def two_client_overload(duration=10.0):
+    """'flood' sends 60 req/s, 'polite' 15 req/s — both above their fair
+    share of the 4-replica cluster, so fairness is actually contested."""
+    reqs, rid = [], 0
+    for client, rate in (("flood", 60.0), ("polite", 15.0)):
+        t = 0.0
+        while t < duration:
+            t += 1.0 / rate
+            reqs.append(Request(rid=rid, client=client, arrival=t,
+                                prompt_len=50, output_len=100,
+                                keywords=("chat",)))
+            rid += 1
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def main():
+    cm = CostModel(get_config("llama2-7b"), A100_80G)
+
+    for policy in ("round_robin", "least_kv", "min_ttft"):
+        cluster = make_sim_cluster(
+            4, cm, scheduler="vtc", policy=policy,
+            sim_cfg=SimConfig(max_batch=8, kv_budget_tokens=4000))
+        res = cluster.run(two_client_overload(), max_time=10.0)
+        svc = res.per_client_service()
+        share = svc["flood"] / (svc["flood"] + svc["polite"])
+        s = res.summary()
+        print(f"policy={policy:<12} tput={s['throughput_tok_s']:7.0f} tok/s "
+              f"p50_ttft={s['p50_ttft']:.2f}s flood_share={share:.2f} "
+              f"per_replica={s['per_replica']}")
+
+    print("\nflood sends 4x the traffic of polite, sprayed over every "
+          "replica;\nglobal counters hold its service share near 0.50 "
+          "under all routing policies.")
+
+
+if __name__ == "__main__":
+    main()

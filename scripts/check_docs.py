@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Docs cross-reference checker (run by CI next to pytest).
+
+Fails (exit 1) if:
+- any `DESIGN.md §N` citation — in source or markdown — points at a
+  missing DESIGN.md or a section number DESIGN.md does not define
+  (sections are `## N. Title` headings);
+- any relative markdown link in a root-level .md file points at a
+  missing file or directory.
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SECTION_RE = re.compile(r"^##\s+(\d+)\.", re.M)
+# catches "DESIGN.md §8" and grouped forms like "DESIGN.md §3, §8"
+CITE_RE = re.compile(r"DESIGN\.md((?:\s*[,;]?\s*§\s*\d+)+)")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def design_sections():
+    p = ROOT / "DESIGN.md"
+    if not p.exists():
+        return None
+    return {int(n) for n in SECTION_RE.findall(p.read_text())}
+
+
+def source_files():
+    for pattern in ("*.md", "src/**/*.py", "tests/**/*.py",
+                    "benchmarks/**/*.py", "examples/**/*.py",
+                    "scripts/**/*.py"):
+        yield from sorted(ROOT.glob(pattern))
+
+
+def check_section_citations(errors):
+    sections = design_sections()
+    for path in source_files():
+        text = path.read_text(errors="replace")
+        for m in CITE_RE.finditer(text):
+            line = text[:m.start()].count("\n") + 1
+            cited = [int(n) for n in re.findall(r"\d+", m.group(1))]
+            if sections is None:
+                errors.append(f"{path.relative_to(ROOT)}:{line}: cites "
+                              f"DESIGN.md §{cited} but DESIGN.md is missing")
+                continue
+            for n in cited:
+                if n not in sections:
+                    errors.append(
+                        f"{path.relative_to(ROOT)}:{line}: cites DESIGN.md "
+                        f"§{n} but DESIGN.md defines {sorted(sections)}")
+
+
+def check_markdown_links(errors):
+    for md in sorted(ROOT.glob("*.md")):
+        text = md.read_text(errors="replace")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            line = text[:m.start()].count("\n") + 1
+            if not (md.parent / target).exists():
+                errors.append(f"{md.name}:{line}: broken link -> {target}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    check_section_citations(errors)
+    check_markdown_links(errors)
+    if errors:
+        print(f"check_docs: {len(errors)} broken cross-reference(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("check_docs: all DESIGN.md citations and markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

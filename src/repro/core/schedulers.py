@@ -61,6 +61,12 @@ class SchedulerBase:
                     tps: float, util: float):
         pass
 
+    def on_requeue(self, req: Request, now: float):
+        """A popped request failed admission (``canSchedule``/adaptive
+        batching) and went back to the head of its queue — undo any
+        pop-time charge so failed attempts are free."""
+        pass
+
     def pop_next(self, now: float) -> Optional[Request]:
         raise NotImplementedError
 
@@ -113,6 +119,12 @@ class RPM(SchedulerBase):
             self.queues[best_c].popleft()
             self.windows[best_c].append(now)
         return best
+
+    def on_requeue(self, req, now):
+        # refund the quota entry charged at pop time
+        w = self.windows[req.client]
+        if w:
+            w.pop()
 
 
 class VTC(SchedulerBase):

@@ -2,12 +2,13 @@
 
 Reproduces the paper's evaluation figures deterministically on CPU: the
 engine loop (admission → chunked prefill → batched decode → completion)
-is the same structure as ``repro.serving.engine``; iteration *timing*
-comes from the analytic roofline cost model instead of wall clock, so
-latency/throughput/utilization numbers reflect the target accelerator
-rather than this container.
+is literally shared with ``repro.serving.engine`` — both drive the same
+``repro.serving.batch_core.BatchCore`` (DESIGN.md §6); iteration
+*timing* comes from the analytic roofline cost model instead of wall
+clock, so latency/throughput/utilization numbers reflect the target
+accelerator rather than this container.
 
-Serving mechanics modeled:
+Serving mechanics modeled (all inside ``BatchCore``):
 - continuous batching with per-iteration admission (work-conserving);
 - chunked prefill (stall-free: running decodes never pause for a long
   prompt — Sarathi-style prefill budget per iteration);
@@ -16,29 +17,27 @@ Serving mechanics modeled:
 - adaptive batching: admission stops once the projected iteration time
   exceeds the target (keeps TTFT bounded under bursts);
 - per-batch refresh overhead (host-bound gap — the Figure 2c mechanism).
+
+The simulator also exposes the replica protocol (``submit`` / ``step`` /
+``clock`` / ``has_work``) consumed by ``repro.serving.cluster.Cluster``
+(DESIGN.md §7), so multi-replica experiments reuse this exact loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
-from repro.core.request import (DECODING, FINISHED, PREFILLING, Request,
-                                WAITING)
+from repro.core.request import DECODING, FINISHED, PREFILLING, Request
 from repro.core.schedulers import SchedulerBase
+from repro.serving.batch_core import BatchConfig, BatchCore
 from repro.serving.costmodel import CostModel
 
 
 @dataclasses.dataclass
-class SimConfig:
-    max_batch: int = 32               # L_b
-    kv_budget_tokens: Optional[int] = None   # M (None -> from cost model)
-    prefill_chunk: int = 512          # chunked-prefill budget per iteration
-    stall_free: bool = True
-    adaptive_batching: bool = True
-    target_iter_time: float = 0.25    # s; adaptive-batching admission cap
-    default_reserve: int = 256        # KV reservation w/o predictor
+class SimConfig(BatchConfig):
+    """BatchCore knobs + the simulator's own stopping horizon."""
     max_time: float = 1e9
 
 
@@ -118,132 +117,124 @@ class SimResult:
 
 
 class Simulator:
+    """One simulated replica.  ``run`` drives a whole trace; the
+    ``submit``/``step`` pair is the per-iteration API the cluster layer
+    uses to interleave several replicas on a global event loop."""
+
     def __init__(self, cost_model: CostModel, scheduler: SchedulerBase,
                  sim_cfg: SimConfig = SimConfig(), observer=None):
         self.cm = cost_model
         self.sched = scheduler
         self.cfg = sim_cfg
         self.observer = observer
-        self.kv_budget = (sim_cfg.kv_budget_tokens
-                          or cost_model.kv_budget_tokens())
+        self.core = BatchCore(scheduler, cost_model, sim_cfg,
+                              observer=observer)
+        self.kv_budget = self.core.kv_budget
+        self._reset()
 
-    def _reserve(self, req: Request) -> int:
-        pred = req.pred_output_len
-        return req.prompt_len + int(pred if pred is not None
-                                    else self.cfg.default_reserve)
+    def _reset(self):
+        self.t = 0.0
+        self.running: List[Request] = []
+        self.tl = Timeline()
+        self.n_finished = 0
+        self.core.kv_used = 0
+        self.core.reserved.clear()
+
+    # -- replica protocol (cluster layer) -----------------------------------
+    @property
+    def clock(self) -> float:
+        return self.t
+
+    def advance_to(self, t: float):
+        self.t = max(self.t, t)
+
+    def submit(self, req: Request):
+        self.sched.on_arrival(req, self.t)
+
+    def has_work(self) -> bool:
+        return bool(self.running) or self.sched.has_waiting()
+
+    def kv_load(self) -> float:
+        return self.core.kv_load()
+
+    def queued_prompt_tokens(self) -> int:
+        return sum(r.prompt_len for q in self.sched.queues.values()
+                   for r in q) + sum(r.prompt_len - r.prefill_done
+                                     for r in self.running
+                                     if r.state == PREFILLING)
+
+    def step(self) -> bool:
+        """One continuous-batching iteration on this replica's clock.
+        Returns False when idle (no running batch, nothing admissible)."""
+        t = self.t
+        # admission (Algorithm 1 inner loop, shared BatchCore)
+        admitted = self.core.admit(t, len(self.running))
+        self.running.extend(admitted)
+        if not self.running and not self.sched.has_waiting():
+            return False
+
+        # one continuous-batching iteration
+        prefill_tokens = self.core.plan_prefill(self.running)
+        decoding = [r for r in self.running if r.state == DECODING]
+        ctxs = [r.prompt_len + r.generated for r in decoding]
+        fresh = bool(admitted) or not self.running
+        overhead = self.core.refresh_overhead(fresh)
+        t_iter = self.core.iteration_time(prefill_tokens, ctxs, fresh)
+        t += t_iter
+        self.t = t
+
+        # token production
+        done_now = []
+        for r in self.running:
+            if r.state == PREFILLING and r.prefill_done >= r.prompt_len:
+                r.state = DECODING
+                r.generated = 1              # prefill emits first token
+                r.first_token_time = t
+                self.sched.on_token(r, t, 1)
+            elif r.state == DECODING:
+                r.generated += 1
+                self.sched.on_token(r, t, 1)
+            if r.state == DECODING and r.generated >= r.output_len:
+                r.state = FINISHED
+                r.finish_time = t
+                done_now.append(r)
+
+        # completions -> feedback loop (BatchCore closes Algorithm 1)
+        iter_tokens = prefill_tokens + len(decoding)
+        util = (1.0 - overhead / t_iter) * min(
+            len(self.running) / max(self.cfg.max_batch * 0.25, 1), 1.0)
+        for r in done_now:
+            self.running.remove(r)
+            self.core.complete(r, t, util=util)
+            self.n_finished += 1
+
+        # timeline sample
+        self.tl.t.append(t)
+        self.tl.util.append(util)
+        self.tl.batch.append(len(self.running) + len(done_now))
+        self.tl.tokens.append(iter_tokens)
+        self.tl.service.append(dict(self.sched.service))
+        return True
 
     def run(self, requests: List[Request], max_time: float = None) -> SimResult:
-        cfg = self.cfg
-        max_time = max_time or cfg.max_time
+        max_time = max_time or self.cfg.max_time
+        self._reset()
         pending = sorted(requests, key=lambda r: r.arrival)
         pi = 0
-        t = 0.0
-        running: List[Request] = []
-        kv_used = 0
-        reserved: Dict[int, int] = {}
-        tl = Timeline()
-        finished = 0
         n_total = len(pending)
 
-        while finished < n_total and t < max_time:
-            # 1. arrivals up to now
-            while pi < n_total and pending[pi].arrival <= t:
-                self.sched.on_arrival(pending[pi], t)
+        while self.n_finished < n_total and self.t < max_time:
+            # arrivals up to now
+            while pi < n_total and pending[pi].arrival <= self.t:
+                self.submit(pending[pi])
                 pi += 1
             # idle jump
-            if not running and not self.sched.has_waiting():
+            if not self.running and not self.sched.has_waiting():
                 if pi >= n_total:
                     break
-                t = pending[pi].arrival
+                self.t = pending[pi].arrival
                 continue
+            self.step()
 
-            # 2. admission (Algorithm 1 inner loop)
-            admitted_now = []
-            while len(running) < cfg.max_batch:
-                req = self.sched.pop_next(t)
-                if req is None:
-                    break
-                need = self._reserve(req)
-                if kv_used + need > self.kv_budget and running:
-                    # canSchedule failed -> requeue at head, stop admitting
-                    self.sched.queues[req.client].appendleft(req)
-                    break
-                if cfg.adaptive_batching and running:
-                    proj = self.cm.prefill_time(
-                        min(req.prompt_len, cfg.prefill_chunk))
-                    if proj > cfg.target_iter_time:
-                        self.sched.queues[req.client].appendleft(req)
-                        break
-                kv_used += need
-                reserved[req.rid] = need
-                req.state = PREFILLING
-                req.admit_time = t
-                req.prefill_done = 0
-                self.sched.on_admit(req, t)
-                if self.observer is not None:
-                    self.observer.on_admit(req, t)
-                running.append(req)
-                admitted_now.append(req)
-
-            # 3. one continuous-batching iteration
-            prefill_budget = cfg.prefill_chunk if cfg.stall_free else 1 << 30
-            prefill_tokens = 0
-            for r in running:
-                if r.state == PREFILLING and prefill_budget > 0:
-                    chunk = min(r.prompt_len - r.prefill_done, prefill_budget)
-                    r.prefill_done += chunk
-                    prefill_budget -= chunk
-                    prefill_tokens += chunk
-            decoding = [r for r in running if r.state == DECODING]
-            ctxs = [r.prompt_len + r.generated for r in decoding]
-            t_comp = (self.cm.prefill_time(prefill_tokens)
-                      if prefill_tokens else 0.0) \
-                + self.cm.decode_step_time(ctxs)
-            overhead = self.cm.hw.batch_overhead if (admitted_now or
-                                                     not running) else 0.0
-            t_iter = max(t_comp + overhead, 1e-6)
-            t += t_iter
-
-            # 4. token production
-            done_now = []
-            for r in running:
-                if r.state == PREFILLING and r.prefill_done >= r.prompt_len:
-                    r.state = DECODING
-                    r.generated = 1              # prefill emits first token
-                    r.first_token_time = t
-                    self.sched.on_token(r, t, 1)
-                elif r.state == DECODING:
-                    r.generated += 1
-                    self.sched.on_token(r, t, 1)
-                if r.state == DECODING and r.generated >= r.output_len:
-                    r.state = FINISHED
-                    r.finish_time = t
-                    done_now.append(r)
-
-            # 5. completions -> feedback loop
-            iter_tokens = prefill_tokens + len(decoding)
-            util = (1.0 - overhead / t_iter) * min(
-                len(running) / max(cfg.max_batch * 0.25, 1), 1.0)
-            for r in done_now:
-                running.remove(r)
-                kv_used -= reserved.pop(r.rid)
-                finished += 1
-                # TPS is GPU execution throughput (§3.2: "tokens per second
-                # in GPU"), not user-perceived — exclude queue wait.
-                exec_lat = max(t - (r.admit_time or t), 1e-9)
-                tps = (r.prompt_len + r.generated) / exec_lat
-                self.sched.on_complete(r, t, latency=exec_lat, tps=tps,
-                                       util=util)
-                if self.observer is not None:
-                    self.observer.on_complete(r, t, latency=exec_lat,
-                                              tps=tps, util=util)
-
-            # 6. timeline sample
-            tl.t.append(t)
-            tl.util.append(util)
-            tl.batch.append(len(running) + len(done_now))
-            tl.tokens.append(iter_tokens)
-            tl.service.append(dict(self.sched.service))
-
-        return SimResult(requests=pending, timeline=tl, scheduler=self.sched,
-                         sim_time=t)
+        return SimResult(requests=pending, timeline=self.tl,
+                         scheduler=self.sched, sim_time=self.t)

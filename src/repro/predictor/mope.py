@@ -1,7 +1,14 @@
-"""MoPE — Mixture of Prediction Experts (paper §6) + baselines.
+"""MoPE — Mixture of Prediction Experts (paper §6; DESIGN.md §5).
 
 ``MoPE.predict(req)`` fills the request's predicted output tokens,
-latency, TPS and utilization — the four holistic-fairness inputs.
+latency, TPS and utilization — the four holistic-fairness inputs the
+dual counters (paper §3, DESIGN.md §2) need *before* execution: a
+deterministic router picks a length regime, a per-regime expert predicts
+output tokens, and the metric map (``repro.predictor.metric_map``) turns
+(prompt, predicted output) into latency/TPS/Util.  ``observe`` is
+Algorithm 1 line 20: actual metrics recalibrate the map and a per-regime
+bias online.  In a cluster (DESIGN.md §7) one predictor instance is
+shared by all replicas, so recalibration is fleet-wide.
 Baselines: ``SingleProxy`` (one unified expert, the μ-Serve-style
 baseline [31]) and ``Oracle`` (perfect lengths — Table 1's upper bound).
 """

@@ -1,0 +1,175 @@
+"""Shared continuous-batching core (paper Algorithm 1; DESIGN.md §6).
+
+One implementation of the admission / ``canSchedule`` / KV-reservation /
+completion-feedback loop, driven by two frontends:
+
+- ``repro.core.simulator.Simulator`` — discrete-event timing from the
+  analytic roofline cost model (reproduces the paper's figures on CPU);
+- ``repro.serving.engine.ServingEngine`` — real JAX decode with a dual
+  clock (wall time for measurement, modeled time for scheduler feedback).
+
+Both drivers own their iteration *timing and token production*; the core
+owns every scheduling decision so simulator and engine cannot drift:
+
+- admission (Algorithm 1 inner loop): pop the scheduler's next request,
+  check the batch-size cap L_b and the KV budget M with predicted-output
+  reservation (``canSchedule``), optionally cap projected iteration time
+  (adaptive batching), charge counters via ``scheduler.on_admit``;
+- chunked-prefill budgeting (stall-free scheduling, Sarathi-style);
+- iteration timing from the cost model (incl. per-refresh host overhead);
+- completion: release the KV reservation and feed *actual* latency /
+  TPS / utilization back to the scheduler and predictor (Algorithm 1
+  line 20 — the recalibration half of the loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.request import FINISHED, PREFILLING, Request
+from repro.core.schedulers import SchedulerBase
+from repro.serving.costmodel import CostModel
+
+
+@dataclasses.dataclass
+class BatchConfig:
+    """Knobs of the shared admission loop (defaults match the paper's
+    simulator setup; the engine overrides ``default_reserve`` and turns
+    adaptive batching off — it prefills whole prompts at admission)."""
+    max_batch: int = 32               # L_b
+    kv_budget_tokens: Optional[int] = None   # M (None -> from cost model)
+    prefill_chunk: int = 512          # chunked-prefill budget per iteration
+    stall_free: bool = True
+    adaptive_batching: bool = True
+    target_iter_time: float = 0.25    # s; adaptive-batching admission cap
+    default_reserve: int = 256        # KV reservation w/o predictor
+
+
+class BatchCore:
+    """Admission + KV accounting + completion feedback, frontend-agnostic.
+
+    Drivers call, per iteration:
+        ``admit(now, batch_len)``     -> newly admitted requests
+        ``plan_prefill(running)``     -> prefill tokens this iteration
+        ``iteration_time(...)``       -> modeled iteration duration
+        ``complete(req, now, ...)``   -> close a finished request
+    """
+
+    def __init__(self, scheduler: SchedulerBase, cost_model: CostModel,
+                 cfg: BatchConfig = None, observer=None):
+        self.sched = scheduler
+        self.cm = cost_model
+        self.cfg = cfg or BatchConfig()
+        self.observer = observer
+        self.kv_budget = (self.cfg.kv_budget_tokens
+                          or cost_model.kv_budget_tokens())
+        self.kv_used = 0
+        self.reserved: Dict[int, int] = {}
+
+    # -- canSchedule ---------------------------------------------------------
+    def reserve_amount(self, req: Request) -> int:
+        """KV tokens to reserve: prompt + predicted output (or default)."""
+        pred = req.pred_output_len
+        return req.prompt_len + int(pred if pred is not None
+                                    else self.cfg.default_reserve)
+
+    def kv_load(self) -> float:
+        """Fraction of the KV budget currently reserved (dispatcher signal)."""
+        return self.kv_used / max(self.kv_budget, 1)
+
+    def _requeue(self, req: Request, now: float):
+        self.sched.queues[req.client].appendleft(req)
+        self.sched.on_requeue(req, now)
+
+    def try_admit(self, now: float, batch_len: int) -> Optional[Request]:
+        """One Algorithm-1 admission attempt.  Returns the admitted request
+        or None (batch full / queue empty / canSchedule failed — in which
+        case the popped request is put back at the head of its queue)."""
+        if batch_len >= self.cfg.max_batch:
+            return None
+        req = self.sched.pop_next(now)
+        if req is None:
+            return None
+        need = self.reserve_amount(req)
+        if self.kv_used + need > self.kv_budget and batch_len > 0:
+            # canSchedule failed -> requeue at head, stop admitting
+            self._requeue(req, now)
+            return None
+        if self.cfg.adaptive_batching and batch_len > 0:
+            proj = self.cm.prefill_time(
+                min(req.prompt_len, self.cfg.prefill_chunk))
+            if proj > self.cfg.target_iter_time:
+                self._requeue(req, now)
+                return None
+        self.kv_used += need
+        self.reserved[req.rid] = need
+        req.state = PREFILLING
+        req.admit_time = now
+        req.prefill_done = 0
+        self.sched.on_admit(req, now)
+        if self.observer is not None:
+            self.observer.on_admit(req, now)
+        return req
+
+    def admit(self, now: float, batch_len: int) -> List[Request]:
+        """Admission loop: admit while the batch cap, KV budget and
+        adaptive-batching projection all hold."""
+        admitted: List[Request] = []
+        while True:
+            req = self.try_admit(now, batch_len + len(admitted))
+            if req is None:
+                break
+            admitted.append(req)
+        return admitted
+
+    # -- chunked prefill -----------------------------------------------------
+    def plan_prefill(self, running: List[Request]) -> int:
+        """Advance PREFILLING requests within this iteration's chunk budget
+        (stall-free: running decodes never wait on a long prompt).
+        Mutates ``prefill_done``; returns prefill tokens scheduled."""
+        budget = self.cfg.prefill_chunk if self.cfg.stall_free else 1 << 30
+        total = 0
+        for r in running:
+            if r.state == PREFILLING and budget > 0:
+                chunk = min(r.prompt_len - r.prefill_done, budget)
+                r.prefill_done += chunk
+                budget -= chunk
+                total += chunk
+        return total
+
+    # -- timing --------------------------------------------------------------
+    def refresh_overhead(self, fresh_batch: bool) -> float:
+        """Host-side batch-refresh cost, paid whenever the batch changed
+        (the Figure 2c mechanism) — the single place this rule lives."""
+        return self.cm.hw.batch_overhead if fresh_batch else 0.0
+
+    def iteration_time(self, prefill_tokens: int, ctx_lens,
+                       fresh_batch: bool) -> float:
+        """Modeled duration of one iteration: chunked prefill + batched
+        decode + host-side refresh overhead when the batch changed."""
+        t = (self.cm.prefill_time(prefill_tokens) if prefill_tokens
+             else 0.0) + self.cm.decode_step_time(ctx_lens)
+        return max(t + self.refresh_overhead(fresh_batch), 1e-6)
+
+    # -- completion feedback -------------------------------------------------
+    def complete(self, req: Request, now: float, util: float = None):
+        """Close the loop (Algorithm 1 line 20): free the reservation and
+        feed actual metrics to the scheduler (which recalibrates the
+        predictor).  ``latency`` is GPU execution time — queue wait is
+        excluded (§3.2: TPS is "tokens per second in GPU").  ``util``
+        defaults to the cost model's MFU over the request's window."""
+        req.state = FINISHED
+        if req.finish_time is None:
+            req.finish_time = now
+        self.kv_used -= self.reserved.pop(req.rid, 0)
+        exec_lat = max(now - (req.admit_time if req.admit_time is not None
+                              else now), 1e-9)
+        tps = (req.prompt_len + req.generated) / exec_lat
+        if util is None:
+            util = self.cm.mfu(req.prompt_len + req.generated, exec_lat)
+        self.sched.on_complete(req, now, latency=exec_lat, tps=tps,
+                               util=util)
+        if self.observer is not None:
+            self.observer.on_complete(req, now, latency=exec_lat, tps=tps,
+                                      util=util)
+        return exec_lat, tps, util

@@ -1,0 +1,276 @@
+"""Multi-replica fairness-aware cluster serving (DESIGN.md §7).
+
+Extends the paper's single-GPU Algorithm 1 to N replicas the way VTC
+[Sheng et al., OSDI'24] and Locality-aware Fair Scheduling
+(arXiv:2501.14312) frame fair scheduling as a multi-worker dispatch
+problem:
+
+- **Replicas** are anything implementing the replica protocol —
+  ``submit(req)`` / ``step()`` / ``clock`` / ``advance_to(t)`` /
+  ``has_work()`` / ``n_finished`` / ``kv_load()`` /
+  ``queued_prompt_tokens()``.  Both ``repro.core.simulator.Simulator``
+  (analytic timing, possibly heterogeneous ``Hardware`` specs) and
+  ``repro.serving.engine.ServingEngine`` (real JAX decode) qualify, so
+  cluster experiments run on either frontend of the shared ``BatchCore``.
+
+- **Global fairness state**: ``share_fairness_state`` re-binds the
+  per-client counter containers (weighted service, VTC counters,
+  Equinox UFC/RFC, RPM quota windows) so all replicas read and charge
+  the *same* per-client state.  A client spraying requests across
+  replicas accrues its counter globally and cannot dodge fair
+  scheduling by fanning out — each replica's argmin pick sees the
+  client's full cluster-wide consumption.
+
+- **Routing policies** (pluggable, ``ROUTING_POLICIES``): which replica
+  a request lands on is a load-balancing decision, *not* a fairness
+  decision — fairness is enforced by the shared counters at every
+  replica's admission loop.  Provided: ``round_robin``,
+  ``least_kv`` (lowest KV-budget utilisation), ``min_ttft`` (lowest
+  predicted time-to-first-token from the replica's clock, queue backlog
+  and roofline prefill cost).
+
+The cluster event loop is a discrete-event merge: requests are routed
+when the *minimum* replica clock passes their arrival, and the
+furthest-behind replica steps next, so no replica consumes events from
+another replica's future.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.metrics import jain
+from repro.core.request import FINISHED, Request
+from repro.core.schedulers import SchedulerBase, make_scheduler
+from repro.core.simulator import SimConfig, Simulator
+from repro.serving.costmodel import CostModel
+
+# Per-client fairness containers that must be cluster-global.  Queues are
+# deliberately NOT shared — they are the per-replica dispatch outcome.
+_SHARED_ATTRS = ("service", "arrived_clients",   # SchedulerBase
+                 "counter",                      # VTC
+                 "ufc", "rfc",                   # Equinox
+                 "windows")                      # RPM quota windows
+
+
+def share_fairness_state(scheds: Sequence[SchedulerBase]):
+    """Re-bind per-client counter containers so every scheduler reads and
+    charges the same global state.  (The Equinox latency-normalization
+    EMA stays replica-local by design — it normalizes against the load
+    the *local* batch produces; see DESIGN.md §8.)"""
+    if not scheds:
+        return scheds
+    head = scheds[0]
+    for s in scheds[1:]:
+        if type(s) is not type(head):
+            raise TypeError("replicas must run the same scheduling policy "
+                            f"({type(head).__name__} vs {type(s).__name__})")
+        for attr in _SHARED_ATTRS:
+            if hasattr(head, attr):
+                setattr(s, attr, getattr(head, attr))
+    return scheds
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+# ---------------------------------------------------------------------------
+def route_round_robin(cluster: "Cluster", req: Request) -> int:
+    idx = cluster._rr % len(cluster.replicas)
+    cluster._rr += 1
+    return idx
+
+
+def route_least_kv(cluster: "Cluster", req: Request) -> int:
+    """Lowest KV-budget utilisation, ties broken by queued prefill work."""
+    return int(min(range(len(cluster.replicas)),
+                   key=lambda i: (cluster.replicas[i].kv_load(),
+                                  cluster.replicas[i].queued_prompt_tokens(),
+                                  i)))
+
+
+def route_min_ttft(cluster: "Cluster", req: Request) -> int:
+    """Lowest predicted TTFT: replica clock + roofline prefill time of the
+    queued prompt backlog plus this request's own prompt."""
+    def score(i):
+        rep = cluster.replicas[i]
+        backlog = rep.queued_prompt_tokens() + req.prompt_len
+        return rep.clock + rep.cm.prefill_time(backlog)
+    return int(min(range(len(cluster.replicas)), key=lambda i: (score(i), i)))
+
+
+ROUTING_POLICIES: Dict[str, Callable[["Cluster", Request], int]] = {
+    "round_robin": route_round_robin,
+    "least_kv": route_least_kv,
+    "min_ttft": route_min_ttft,
+}
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ClusterResult:
+    requests: List[Request]
+    replicas: list
+    scheduler: SchedulerBase          # replica 0's
+    sim_time: float
+    routed_to: Dict[int, int]         # rid -> replica index
+    counters_shared: bool = True      # whether scheduler state is global
+
+    def _merged(self, per_sched) -> Dict[str, float]:
+        """One table per client: replica 0's when counters are shared
+        (all replicas alias it), summed across replicas otherwise."""
+        if self.counters_shared:
+            return dict(per_sched(self.scheduler))
+        out: Dict[str, float] = {}
+        for rep in self.replicas:
+            for c, v in per_sched(rep.sched).items():
+                out[c] = out.get(c, 0.0) + v
+        return out
+
+    def ttfts(self, client=None):
+        return np.array([r.ttft() for r in self.requests
+                         if r.ttft() is not None
+                         and (client is None or r.client == client)])
+
+    def latencies(self, client=None):
+        return np.array([r.e2e_latency() for r in self.requests
+                         if r.e2e_latency() is not None
+                         and (client is None or r.client == client)])
+
+    def throughput_tokens_per_s(self) -> float:
+        tot = sum(r.prompt_len + r.generated for r in self.requests
+                  if r.state == FINISHED)
+        return tot / max(self.sim_time, 1e-9)
+
+    def per_client_service(self) -> Dict[str, float]:
+        return self._merged(lambda s: s.service)
+
+    def jain_index(self) -> float:
+        return jain(list(self._merged(
+            lambda s: s.fairness_scores()).values()))
+
+    def replica_finished(self) -> List[int]:
+        return [rep.n_finished for rep in self.replicas]
+
+    def summary(self) -> dict:
+        ttfts = self.ttfts()
+        lats = self.latencies()
+        return {
+            "throughput_tok_s": self.throughput_tokens_per_s(),
+            "p50_ttft": float(np.percentile(ttfts, 50)) if len(ttfts)
+            else None,
+            "p90_ttft": float(np.percentile(ttfts, 90)) if len(ttfts)
+            else None,
+            "mean_latency": float(lats.mean()) if len(lats) else None,
+            "jain": self.jain_index(),
+            "finished": sum(r.state == FINISHED for r in self.requests),
+            "total": len(self.requests),
+            "per_replica": self.replica_finished(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# cluster
+# ---------------------------------------------------------------------------
+class Cluster:
+    """N replicas + a global fairness-aware dispatcher."""
+
+    def __init__(self, replicas: list,
+                 policy: Union[str, Callable] = "least_kv",
+                 share_counters: bool = True):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = replicas
+        if isinstance(policy, str):
+            if policy not in ROUTING_POLICIES:
+                raise ValueError(f"unknown routing policy {policy!r}; "
+                                 f"choose from {sorted(ROUTING_POLICIES)}")
+            policy = ROUTING_POLICIES[policy]
+        self.policy = policy
+        self._rr = 0
+        self.routed_to: Dict[int, int] = {}
+        self.counters_shared = share_counters
+        if share_counters:
+            share_fairness_state([rep.sched for rep in replicas])
+
+    def dispatch(self, req: Request) -> int:
+        """Route one request to a replica (records the decision)."""
+        idx = self.policy(self, req)
+        self.routed_to[req.rid] = idx
+        self.replicas[idx].submit(req)
+        return idx
+
+    def run(self, requests: List[Request],
+            max_time: float = 1e9) -> ClusterResult:
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pi, n_total = 0, len(pending)
+
+        # completion is judged on THIS run's requests (leftovers from an
+        # earlier max_time-cut run may still finish; they don't count)
+        while any(r.state != FINISHED for r in pending):
+            busy = [rep for rep in self.replicas if rep.has_work()]
+            if not busy:
+                # whole cluster idle: jump to the next arrival
+                if pi >= n_total:
+                    break
+                t_now = pending[pi].arrival
+                if t_now >= max_time:
+                    break
+                for rep in self.replicas:
+                    rep.advance_to(t_now)
+                self.dispatch(pending[pi])
+                pi += 1
+                continue
+            # event frontier = slowest busy replica; idle replicas keep
+            # pace (they would accept work instantly at "now")
+            t_now = min(rep.clock for rep in busy)
+            if t_now >= max_time:
+                break
+            for rep in self.replicas:
+                if not rep.has_work():
+                    rep.advance_to(t_now)
+            # route every arrival the frontier has reached
+            while pi < n_total and pending[pi].arrival <= t_now:
+                self.dispatch(pending[pi])
+                pi += 1
+            rep = min((r for r in self.replicas if r.has_work()),
+                      key=lambda r: r.clock)
+            before = rep.clock
+            rep.step()
+            if rep.clock <= before:
+                # no progress (e.g. RPM quota starvation on the engine):
+                # model a host polling tick so the event loop advances
+                rep.advance_to(before + rep.cm.hw.batch_overhead)
+
+        sim_time = max(rep.clock for rep in self.replicas)
+        return ClusterResult(requests=pending, replicas=self.replicas,
+                             scheduler=self.replicas[0].sched,
+                             sim_time=sim_time, routed_to=dict(self.routed_to),
+                             counters_shared=self.counters_shared)
+
+
+def make_sim_cluster(n_replicas: int, cost_model: CostModel = None, *,
+                     cost_models: Optional[Sequence[CostModel]] = None,
+                     scheduler: str = "vtc", predictor=None,
+                     sim_cfg: SimConfig = None,
+                     policy: Union[str, Callable] = "least_kv",
+                     share_counters: bool = True, observer=None,
+                     **sched_kw) -> Cluster:
+    """Cluster of simulated replicas.  Pass ``cost_models`` (one per
+    replica) for a heterogeneous fleet — e.g. mixing ``A100_80G`` and
+    TPU-v5e ``Hardware`` presets; the predictor (shared by all replicas,
+    so recalibration is global too) and fairness counters span the
+    cluster."""
+    cms = list(cost_models) if cost_models is not None \
+        else [cost_model] * n_replicas
+    if len(cms) != n_replicas or any(c is None for c in cms):
+        raise ValueError("provide cost_model or n_replicas cost_models")
+    reps = []
+    for cm in cms:
+        sched = make_scheduler(scheduler, predictor=predictor, **sched_kw)
+        reps.append(Simulator(cm, sched, sim_cfg or SimConfig(),
+                              observer=observer))
+    return Cluster(reps, policy=policy, share_counters=share_counters)

@@ -1,4 +1,4 @@
-"""Analytic TPU-v5e serving cost model.
+"""Analytic TPU-v5e serving cost model (paper §2/Figure 2; DESIGN.md §3).
 
 The paper measures wall-clock latency / throughput / GPU-utilization on
 A100s; this container has no accelerator, so the simulator and the
@@ -7,6 +7,9 @@ hardware (DESIGN.md §3, §8): prefill is compute-bound, decode is
 HBM-bound (weights + KV reads), and every batch refresh pays a host
 overhead — exactly the three mechanisms behind the paper's Figure 2
 (monotone latency, non-monotone throughput, stepwise utilization).
+It also supplies the ``PredictTime``/TPS/Util terms of the metric map
+(DESIGN.md §5) and, via heterogeneous ``Hardware`` presets, the
+per-replica timing of the cluster layer (DESIGN.md §7).
 
 Everything is derived from the ``ModelConfig`` so architectures with
 cheaper decode state (MLA latents, SSM constant state, sliding windows)

@@ -15,6 +15,16 @@ Timing uses a dual clock: wall-clock for real measurements and the
 analytic cost model for target-hardware metrics fed back to the
 scheduler (this container's CPU timings are not meaningful for an
 accelerator-bound system).
+
+Scheduling decisions (admission, ``canSchedule`` KV reservation, the
+completion feedback loop) are NOT re-implemented here: the engine drives
+the same ``repro.serving.batch_core.BatchCore`` as the simulator
+(DESIGN.md §6), so simulator and engine cannot drift apart.  The engine
+prefills whole prompts at admission (no chunking) and therefore runs the
+core with adaptive batching off and ``prefill_chunk`` effectively
+unbounded.  Like the simulator it exposes the replica protocol
+(``submit``/``step``/``clock``/``has_work``) for the cluster layer
+(DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -26,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, ModelConfig
-from repro.core.request import (DECODING, FINISHED, PREFILLING, Request)
+from repro.core.request import DECODING, Request
 from repro.core.schedulers import SchedulerBase
 from repro.kernels import paged_attention
 from repro.models import decode_step, init_cache, init_params, prefill
@@ -34,6 +44,7 @@ from repro.models.layers import dtype_of, embed, mlp, rmsnorm, unembed
 from repro.models.model import model_stages
 from repro.models.attention import apply_rope
 from repro.models.moe import moe_ffn
+from repro.serving.batch_core import BatchConfig, BatchCore
 from repro.serving.costmodel import CostModel
 from repro.serving.kv_cache import PagePool, make_pools
 
@@ -44,13 +55,23 @@ class ServingEngine:
                  kv_budget_tokens: Optional[int] = None,
                  cost_model: Optional[CostModel] = None,
                  backend: str = "slots", page_size: int = 16,
-                 seed: int = 0, sample_temp: float = 0.0):
+                 seed: int = 0, sample_temp: float = 0.0,
+                 observer=None):
         self.cfg = cfg
         self.sched = scheduler
         self.max_slots = max_slots
         self.max_len = max_len
         self.cm = cost_model or CostModel(cfg)
-        self.kv_budget = kv_budget_tokens or max_slots * max_len
+        self.core = BatchCore(
+            scheduler, self.cm,
+            BatchConfig(max_batch=max_slots,
+                        kv_budget_tokens=kv_budget_tokens
+                        or max_slots * max_len,
+                        default_reserve=128,      # engine's legacy reserve
+                        adaptive_batching=False,  # whole-prompt prefill
+                        stall_free=False),
+            observer=observer)
+        self.kv_budget = self.core.kv_budget
         self.sample_temp = sample_temp
         self.rng = jax.random.key(seed)
         if params is None:
@@ -70,7 +91,7 @@ class ServingEngine:
             self.cache = init_cache(cfg, max_slots, max_len)
             # inactive slots decode garbage into slot 0 tokens — masked out
         self.slots: List[Optional[Request]] = [None] * max_slots
-        self.reserved: Dict[int, int] = {}
+        self.reserved = self.core.reserved     # alias: core owns KV accounting
         self.t_model = 0.0            # modeled target-hardware clock
         self.t_wall0 = time.monotonic()
         self.finished: List[Request] = []
@@ -82,15 +103,34 @@ class ServingEngine:
     def now(self) -> float:
         return self.t_model
 
+    # replica protocol (cluster layer) ------------------------------------------
+    @property
+    def clock(self) -> float:
+        return self.t_model
+
+    def advance_to(self, t: float):
+        self.t_model = max(self.t_model, t)
+
+    def has_work(self) -> bool:
+        return any(s is not None for s in self.slots) \
+            or self.sched.has_waiting()
+
+    @property
+    def n_finished(self) -> int:
+        return len(self.finished)
+
+    def kv_load(self) -> float:
+        return self.core.kv_load()
+
+    def queued_prompt_tokens(self) -> int:
+        return sum(r.prompt_len for q in self.sched.queues.values()
+                   for r in q)
+
     def _free_slot(self) -> int:
         for i, s in enumerate(self.slots):
             if s is None:
                 return i
         return -1
-
-    def _reserve_amount(self, req: Request) -> int:
-        pred = req.pred_output_len
-        return int(req.prompt_len + (pred if pred is not None else 128))
 
     def submit(self, req: Request):
         if req.prompt_tokens is None:
@@ -197,25 +237,17 @@ class ServingEngine:
     def step(self):
         """One continuous-batching iteration.  Returns #active requests."""
         now = self.now()
-        # 1. admission
+        # 1. admission (Algorithm 1 inner loop, shared BatchCore)
         admitted = []
         while True:
             slot = self._free_slot()
             if slot < 0:
                 break
-            req = self.sched.pop_next(now)
+            batch_len = sum(s is not None for s in self.slots)
+            req = self.core.try_admit(now, batch_len)
             if req is None:
                 break
-            need = self._reserve_amount(req)
-            if (sum(self.reserved.values()) + need > self.kv_budget
-                    and any(s is not None for s in self.slots)):
-                self.sched.queues[req.client].appendleft(req)
-                break
-            self.reserved[req.rid] = need
-            req.admit_time = now
-            req.state = PREFILLING
-            self.sched.on_admit(req, now)
-            self._admit(req, slot)
+            self._admit(req, slot)              # whole-prompt prefill
             self.sched.on_token(req, now, 1)
             admitted.append(req)
 
@@ -236,14 +268,11 @@ class ServingEngine:
             logits = self._decode_slots(tokens)
             rows = {si: si for si in active_idx}
 
-        # 3. modeled clock advance
+        # 3. modeled clock advance (timing rule shared with the simulator)
         prefill_tokens = sum(r.prompt_len for r in admitted)
         ctxs = [self.slots[i]._pos for i in active_idx]
-        t_iter = (self.cm.prefill_time(prefill_tokens) if prefill_tokens
-                  else 0.0) + self.cm.decode_step_time(ctxs)
-        if admitted:
-            t_iter += self.cm.hw.batch_overhead
-        self.t_model += max(t_iter, 1e-6)
+        self.t_model += self.core.iteration_time(prefill_tokens, ctxs,
+                                                 bool(admitted))
         now = self.now()
 
         # 4. sampling + lifecycle
@@ -262,15 +291,10 @@ class ServingEngine:
             req.generated += 1
             self.sched.on_token(req, now, 1)
             if req.generated >= req.output_len:   # synthetic EOS
-                req.state = FINISHED
-                req.finish_time = now
-                exec_lat = max(now - req.admit_time, 1e-9)
-                tps = (req.prompt_len + req.generated) / exec_lat
-                util = self.cm.mfu(req.prompt_len + req.generated, exec_lat)
-                self.sched.on_complete(req, now, latency=exec_lat, tps=tps,
-                                       util=util)
+                # completion feedback through the shared BatchCore
+                # (frees the KV reservation, defaults util to cm.mfu)
+                self.core.complete(req, now)
                 self.finished.append(req)
-                self.reserved.pop(req.rid, None)
                 if self.backend == "paged":
                     self.pool.free_request(req.rid)
                 self.slots[si] = None

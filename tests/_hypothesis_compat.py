@@ -1,0 +1,35 @@
+"""Optional-`hypothesis` shim for the test suite.
+
+`hypothesis` is a dev-only dependency (see requirements-dev.txt); a clean
+runtime checkout must still be able to collect and run the rest of the
+suite.  Importing ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` keeps the property tests intact when it is installed and
+turns them into skips when it is not.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning None so decorator arguments still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

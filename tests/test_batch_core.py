@@ -1,0 +1,171 @@
+"""BatchCore: the one admission/canSchedule/completion implementation
+shared by the simulator and the serving engine (DESIGN.md §6)."""
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_FACTORIES, get_config
+from repro.core import Request, SimConfig, Simulator, make_scheduler
+from repro.serving.batch_core import BatchConfig, BatchCore
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def mk_reqs(n=10, seed=0, clients=2, arrival_step=0.0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, client=f"client{i % clients}",
+                    arrival=arrival_step * i,
+                    prompt_len=int(rng.integers(8, 24)),
+                    output_len=int(rng.integers(4, 12)),
+                    keywords=("chat",)) for i in range(n)]
+
+
+class AdmitSpy:
+    """Observer recording the admission order (the scheduling decision)."""
+
+    def __init__(self):
+        self.order = []
+
+    def on_admit(self, req, now):
+        self.order.append(req.rid)
+
+    def on_complete(self, req, now, **kw):
+        pass
+
+
+# -- unit behavior -----------------------------------------------------------
+def test_kv_reservation_accounting(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(max_batch=8, kv_budget_tokens=1000,
+                                 adaptive_batching=False))
+    reqs = [Request(rid=i, client="c", arrival=0.0, prompt_len=100,
+                    output_len=10) for i in range(5)]
+    for r in reqs:
+        core.sched.on_arrival(r, 0.0)
+    admitted = core.admit(0.0, 0)
+    # reservation = 100 + default_reserve(256) = 356 -> only 2 fit in 1000
+    assert len(admitted) == 2
+    assert core.kv_used == 2 * 356
+    assert 0 < core.kv_load() <= 1.0
+    for r in admitted:
+        r.generated = r.output_len
+        core.complete(r, 1.0)
+    assert core.kv_used == 0 and not core.reserved
+
+
+def test_over_budget_request_admitted_into_empty_batch(cm):
+    """canSchedule never deadlocks: an empty batch admits even when the
+    reservation alone exceeds the budget (the request runs serially)."""
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(max_batch=4, kv_budget_tokens=50,
+                                 adaptive_batching=False))
+    req = Request(rid=0, client="c", arrival=0.0, prompt_len=100,
+                  output_len=4)
+    core.sched.on_arrival(req, 0.0)
+    assert core.try_admit(0.0, 0) is req
+
+
+def test_failed_admit_requeues_at_head(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(max_batch=8, kv_budget_tokens=400,
+                                 adaptive_batching=False))
+    reqs = [Request(rid=i, client="c", arrival=0.1 * i, prompt_len=100,
+                    output_len=4) for i in range(3)]
+    for r in reqs:
+        core.sched.on_arrival(r, 0.0)
+    admitted = core.admit(0.0, 0)           # 356 each -> only rid 0 fits
+    assert [r.rid for r in admitted] == [0]
+    assert core.sched.queues["c"][0].rid == 1   # back at the head, in order
+
+
+def test_requeue_refunds_rpm_quota(cm):
+    """A failed canSchedule attempt must not consume RPM quota: the pop
+    charges the window, the requeue refunds it."""
+    sched = make_scheduler("rpm", quota_per_min=4)
+    core = BatchCore(sched, cm,
+                     BatchConfig(max_batch=8, kv_budget_tokens=400,
+                                 adaptive_batching=False))
+    reqs = [Request(rid=i, client="c", arrival=0.0, prompt_len=100,
+                    output_len=4) for i in range(3)]
+    for r in reqs:
+        sched.on_arrival(r, 0.0)
+    admitted = core.admit(0.0, 0)       # 356 each: rid 0 fits, rid 1 fails
+    assert [r.rid for r in admitted] == [0]
+    # only the successful admission holds a quota entry
+    assert len(sched.windows["c"]) == 1
+    # repeated failed attempts stay free — quota never drains
+    for _ in range(10):
+        assert core.try_admit(0.0, 1) is None
+    assert len(sched.windows["c"]) == 1
+
+
+def test_chunked_prefill_budget(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(prefill_chunk=64))
+    reqs = [Request(rid=i, client="c", arrival=0.0, prompt_len=100,
+                    output_len=4, state="prefilling") for i in range(3)]
+    total = core.plan_prefill(reqs)
+    assert total == 64                       # stall-free cap
+    assert reqs[0].prefill_done == 64 and reqs[1].prefill_done == 0
+    assert core.plan_prefill(reqs) == 64     # 36 rest of r0 + 28 of r1
+    assert reqs[0].prefill_done == 100 and reqs[1].prefill_done == 28
+
+
+# -- simulator/engine parity --------------------------------------------------
+def _admission_orders(cm, sched_name, n=12):
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    spy = AdmitSpy()
+    eng = ServingEngine(cfg, make_scheduler(sched_name), max_slots=4,
+                        max_len=64, kv_budget_tokens=2000, cost_model=cm,
+                        observer=spy)
+    done = eng.run(mk_reqs(n=n))
+    assert len(done) == n
+    engine_order = list(spy.order)
+
+    spy = AdmitSpy()
+    sim = Simulator(cm, make_scheduler(sched_name),
+                    SimConfig(max_batch=4, kv_budget_tokens=2000,
+                              default_reserve=128,     # engine's reserve
+                              adaptive_batching=False),
+                    observer=spy)
+    res = sim.run(mk_reqs(n=n))
+    assert all(r.state == "finished" for r in res.requests)
+    return engine_order, list(spy.order)
+
+
+def test_simulator_engine_same_admission_order_fcfs(cm):
+    """Both frontends drive the same BatchCore, so the same trace under
+    the same scheduler yields the same admission decisions."""
+    engine_order, sim_order = _admission_orders(cm, "fcfs")
+    assert engine_order == sim_order
+
+
+def test_simulator_engine_vtc_decisions_equivalent(cm):
+    """VTC near-ties can flip on first-token *timing* (the engine prefills
+    whole prompts at admission, the simulator chunks them), but the
+    fairness decisions must stay equivalent: after every admission, the
+    per-client admit counts of the two frontends differ by at most 1."""
+    engine_order, sim_order = _admission_orders(cm, "vtc")
+    assert sorted(engine_order) == sorted(sim_order)
+    counts_e, counts_s = {}, {}
+    for re_, rs in zip(engine_order, sim_order):
+        ce, cs = f"client{re_ % 2}", f"client{rs % 2}"
+        counts_e[ce] = counts_e.get(ce, 0) + 1
+        counts_s[cs] = counts_s.get(cs, 0) + 1
+        for c in set(counts_e) | set(counts_s):
+            assert abs(counts_e.get(c, 0) - counts_s.get(c, 0)) <= 1
+
+
+def test_engine_and_simulator_share_core_class(cm):
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=2,
+                        max_len=64)
+    sim = Simulator(cm, make_scheduler("fcfs"))
+    assert type(eng.core) is BatchCore
+    assert type(sim.core) is BatchCore
+    # the engine's KV accounting *is* the core's
+    assert eng.reserved is eng.core.reserved

@@ -1,0 +1,187 @@
+"""Cluster layer: routing policies, global fairness counters, scaling
+(DESIGN.md §7)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_FACTORIES, get_config
+from repro.core import Request, SimConfig, Simulator, make_scheduler
+from repro.serving.cluster import (Cluster, ROUTING_POLICIES,
+                                   make_sim_cluster, share_fairness_state)
+from repro.serving.costmodel import A100_80G, V5E, CostModel
+from repro.serving.engine import ServingEngine
+from repro.workloads import overload
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def flood_trace(duration=8.0, flood_rate=30.0, fair_rate=2.0):
+    """client-flood sprays far more requests than client-fair; both want
+    the same shape of work."""
+    reqs, rid = [], 0
+    for client, rate in (("flood", flood_rate), ("fair", fair_rate)):
+        t = 0.0
+        while t < duration:
+            t += 1.0 / rate
+            reqs.append(Request(rid=rid, client=client, arrival=t,
+                                prompt_len=50, output_len=100,
+                                keywords=("chat",)))
+            rid += 1
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def overload_flood_trace(duration=10.0):
+    """Flood 60 req/s vs fair 15 req/s — both above their fair share of a
+    4×A100 cluster's capacity, so both stay backlogged to the cutoff."""
+    return flood_trace(duration, flood_rate=60.0, fair_rate=15.0)
+
+
+def small_cluster(cm, n, policy="least_kv", scheduler="vtc", **kw):
+    return make_sim_cluster(
+        n, cm, scheduler=scheduler, policy=policy,
+        sim_cfg=SimConfig(max_batch=8, kv_budget_tokens=4000), **kw)
+
+
+# -- shared fairness state -----------------------------------------------------
+def test_share_fairness_state_rebinds_counters():
+    scheds = [make_scheduler("vtc") for _ in range(3)]
+    share_fairness_state(scheds)
+    assert all(s.counter is scheds[0].counter for s in scheds)
+    assert all(s.service is scheds[0].service for s in scheds)
+    # queues stay replica-local (the dispatch outcome)
+    assert scheds[0].queues is not scheds[1].queues
+
+
+def test_share_fairness_state_rejects_mixed_policies():
+    with pytest.raises(TypeError):
+        share_fairness_state([make_scheduler("vtc"), make_scheduler("fcfs")])
+
+
+def test_flooding_client_held_to_equal_share(cm):
+    """Both clients backlogged on every replica: global VTC holds the
+    4×-demand flooder near a 1/2 weighted-service share."""
+    cl = small_cluster(cm, 4)
+    res = cl.run(overload_flood_trace(), max_time=10.0)
+    svc = res.per_client_service()
+    share = svc["flood"] / (svc["flood"] + svc["fair"])
+    assert abs(share - 0.5) < 0.1
+
+
+def test_flooding_client_cannot_dodge_global_counter(cm):
+    """The multi-replica no-gaming property: the fair client sticks to
+    replica 0 (locality) while the flooder sprays all replicas.  With
+    shared counters, the flood's consumption on replicas 1-3 counts
+    against it on replica 0, so replica 0 serves the fair client almost
+    exclusively; with per-replica counters the flooder grabs ~half of
+    replica 0 on top of its monopoly elsewhere."""
+    def sticky(cluster, req):
+        from repro.serving.cluster import route_round_robin
+        return 0 if req.client == "fair" else route_round_robin(cluster, req)
+
+    fair_tokens, flood_on_rep0 = {}, {}
+    for shared in (True, False):
+        cl = small_cluster(cm, 4, policy=sticky, share_counters=shared)
+        res = cl.run(overload_flood_trace(), max_time=10.0)
+        fair_tokens[shared] = sum(
+            r.prompt_len + r.generated for r in res.requests
+            if r.client == "fair" and r.state == "finished")
+        flood_on_rep0[shared] = sum(
+            1 for r in res.requests if r.client == "flood"
+            and r.state == "finished" and res.routed_to.get(r.rid) == 0)
+    assert fair_tokens[True] > 1.5 * fair_tokens[False]
+    assert flood_on_rep0[True] < flood_on_rep0[False] / 2
+
+
+def test_flooder_spreads_across_all_replicas(cm):
+    cl = small_cluster(cm, 4)
+    res = cl.run(flood_trace(), max_time=20.0)
+    flood_rids = {r.rid for r in res.requests if r.client == "flood"}
+    hit = {res.routed_to[rid] for rid in flood_rids if rid in res.routed_to}
+    assert hit == {0, 1, 2, 3}            # the spray really reaches everyone
+
+
+# -- routing policies ----------------------------------------------------------
+def test_round_robin_routes_evenly(cm):
+    cl = small_cluster(cm, 4, policy="round_robin")
+    res = cl.run(flood_trace(duration=4.0), max_time=20.0)
+    counts = np.bincount(list(res.routed_to.values()), minlength=4)
+    assert counts.max() - counts.min() <= 1
+
+
+@pytest.mark.parametrize("policy", sorted(ROUTING_POLICIES))
+def test_every_policy_completes_and_balances(cm, policy):
+    cl = small_cluster(cm, 3, policy=policy)
+    res = cl.run(flood_trace(duration=4.0), max_time=30.0)
+    s = res.summary()
+    assert s["finished"] == s["total"]
+    assert all(n > 0 for n in s["per_replica"])   # nobody starved
+
+
+def test_cluster_throughput_scales_and_ttft_drops(cm):
+    """The cluster_scaling benchmark's headline curve, in miniature."""
+    wl = overload(duration=6.0)
+    stats = {}
+    for n in (1, 4):
+        cl = make_sim_cluster(n, cm, scheduler="vtc", policy="least_kv",
+                              sim_cfg=SimConfig(max_batch=16,
+                                                kv_budget_tokens=16000))
+        stats[n] = cl.run(wl if n == 1 else overload(duration=6.0),
+                          max_time=30.0).summary()
+    assert stats[4]["throughput_tok_s"] > 1.5 * stats[1]["throughput_tok_s"]
+    assert stats[4]["p50_ttft"] < stats[1]["p50_ttft"]
+
+
+def test_heterogeneous_replicas(cm):
+    """Mixed A100 + v5e fleet: both replicas serve, the faster one more."""
+    cfg = get_config("llama2-7b")
+    cms = [CostModel(cfg, A100_80G), CostModel(cfg, V5E)]
+    cl = make_sim_cluster(2, cost_models=cms, scheduler="fcfs",
+                          policy="min_ttft",
+                          sim_cfg=SimConfig(max_batch=8,
+                                            kv_budget_tokens=8000))
+    res = cl.run(flood_trace(duration=4.0), max_time=60.0)
+    s = res.summary()
+    assert s["finished"] == s["total"]
+    assert all(n > 0 for n in s["per_replica"])
+
+
+def test_single_replica_cluster_matches_simulator(cm):
+    """A 1-replica cluster is just the simulator with dispatch overhead
+    zero: same finish count and final service accounting."""
+    simcfg = SimConfig(max_batch=8, kv_budget_tokens=4000)
+    wl = flood_trace(duration=4.0)
+
+    sim = Simulator(cm, make_scheduler("vtc"), simcfg)
+    ref = sim.run(copy.deepcopy(wl))
+
+    cl = small_cluster(cm, 1)
+    res = cl.run(flood_trace(duration=4.0), max_time=1e9)
+    assert res.summary()["finished"] == sum(
+        r.state == "finished" for r in ref.requests)
+    for c in ("flood", "fair"):
+        np.testing.assert_allclose(res.per_client_service()[c],
+                                   ref.scheduler.service[c], rtol=1e-9)
+
+
+# -- engine replicas -----------------------------------------------------------
+def test_engine_cluster_end_to_end():
+    """Real-JAX engines behind the same Cluster/dispatcher."""
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    reps = [ServingEngine(cfg, make_scheduler("vtc"), max_slots=2,
+                          max_len=64, seed=i) for i in range(2)]
+    cl = Cluster(reps, policy="round_robin")
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, client=f"client{i % 2}", arrival=0.001 * i,
+                    prompt_len=int(rng.integers(8, 16)),
+                    output_len=int(rng.integers(3, 6)),
+                    keywords=("chat",)) for i in range(8)]
+    res = cl.run(reqs, max_time=1e9)
+    s = res.summary()
+    assert s["finished"] == 8
+    assert all(n > 0 for n in s["per_replica"])
+    # shared counters: one global service table across both engines
+    assert reps[0].sched.service is reps[1].sched.service

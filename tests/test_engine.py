@@ -2,8 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import SMOKE_FACTORIES, get_config
 from repro.core import Request, make_scheduler

@@ -54,4 +54,7 @@ def test_build_step_lowers_on_host_mesh(shape_name, monkeypatch):
                            donate_argnums=donate).lower(*args).compile()
     mem = compiled.memory_analysis()
     assert mem.temp_size_in_bytes >= 0
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
+    assert cost.get("flops", 0) > 0
