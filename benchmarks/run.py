@@ -21,6 +21,8 @@ BENCHES = [
     ("jains", "Fig 13: Jain-on-HF across serving setups"),
     ("alpha_sweep", "Fig 15: alpha/beta fairness-throughput trade"),
     ("trace_serving", "Fig 11/12: ShareGPT-like trace on the real engine"),
+    ("ttft_stallfree", "Sec 2/7: stall-free chunked prefill vs whole-prompt"
+                       " TTFT on the real engine"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),

@@ -31,13 +31,14 @@ class SchedulerBase:
         self.queues: Dict[str, collections.deque] = collections.defaultdict(
             collections.deque)
         self.service: Dict[str, float] = collections.defaultdict(float)
-        self.arrived_clients = []
+        # set, not list: on_arrival runs once per request, and an O(n) list
+        # scan here is O(n²) over an LMSYS-sized trace
+        self.arrived_clients = set()
 
     # -- queue plumbing ------------------------------------------------------
     def on_arrival(self, req: Request, now: float):
-        if req.client not in self.queues or (req.client not in
-                                             self.arrived_clients):
-            self.arrived_clients.append(req.client)
+        if req.client not in self.arrived_clients:
+            self.arrived_clients.add(req.client)
             self._on_new_client(req.client)
         self.queues[req.client].append(req)
 

@@ -174,12 +174,12 @@ class Simulator:
             return False
 
         # one continuous-batching iteration
-        prefill_tokens = self.core.plan_prefill(self.running)
+        plan = self.core.plan_prefill(self.running)
+        prefill_tokens = sum(c for _, c in plan)
         decoding = [r for r in self.running if r.state == DECODING]
         ctxs = [r.prompt_len + r.generated for r in decoding]
         fresh = bool(admitted) or not self.running
-        overhead = self.core.refresh_overhead(fresh)
-        t_iter = self.core.iteration_time(prefill_tokens, ctxs, fresh)
+        t_iter = self.core.iteration_time(plan, ctxs, fresh)
         t += t_iter
         self.t = t
 
@@ -201,8 +201,7 @@ class Simulator:
 
         # completions -> feedback loop (BatchCore closes Algorithm 1)
         iter_tokens = prefill_tokens + len(decoding)
-        util = (1.0 - overhead / t_iter) * min(
-            len(self.running) / max(self.cfg.max_batch * 0.25, 1), 1.0)
+        util = self.core.iteration_util(t_iter, fresh, len(self.running))
         for r in done_now:
             self.running.remove(r)
             self.core.complete(r, t, util=util)

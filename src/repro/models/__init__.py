@@ -1,9 +1,11 @@
 from repro.models.model import (decode_step, forward_hidden, init_cache,
                                 init_params, long_context_variant, loss_fn,
-                                model_stages, prefill)
+                                model_stages, prefill, prefill_chunk,
+                                supports_chunked_prefill)
 from repro.models.sharding import (batch_axes, batch_specs, cache_specs,
                                    param_specs)
 
 __all__ = ["decode_step", "forward_hidden", "init_cache", "init_params",
            "long_context_variant", "loss_fn", "model_stages", "prefill",
+           "prefill_chunk", "supports_chunked_prefill",
            "batch_axes", "batch_specs", "cache_specs", "param_specs"]

@@ -298,6 +298,45 @@ def gqa_prefill(params, x, positions, cfg, *, window=0, causal=True):
     return out, (k, v)
 
 
+def gqa_prefill_chunk(params, x, k_cache, v_cache, start, cfg):
+    """Incremental (chunked) prefill step for full-attention dense GQA.
+
+    x: (B, C, d) — one prompt chunk whose prefix [0, start) is already in
+    ``k_cache``/``v_cache`` (B, S_cache, Hkv, D); ``start`` may be a
+    traced scalar (all batch rows share it).  Writes the chunk's K/V at
+    [start, start+C) and attends each chunk token causally over prefix +
+    chunk, so any split of a prompt into chunks reproduces ``gqa_prefill``
+    on the whole prompt.  Scores stay (B, C, S_cache) — never quadratic
+    in the full prompt when C is the stall-free chunk budget.
+    """
+    B, C, _ = x.shape
+    S_cache = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    positions = start + jnp.arange(C)[None, :]           # (1, C), broadcast
+    positions = jnp.broadcast_to(positions, (B, C))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), start, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), start, axis=1)
+    qg = _group_heads(q, Hkv)                            # (B, C, Hkv, G, D)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S_cache)[None, None, :] <= positions[:, :, None]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, C, -1, v_cache.shape[-1]).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, (k_cache, v_cache)
+
+
 def gqa_decode(params, x, k_cache, v_cache, pos, cfg, *, window=0,
                k_scale=None, v_scale=None):
     """One-token decode.  x: (B, 1, d); caches: (B, S_cache, Hkv, D);

@@ -418,6 +418,63 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int):
 
 
 # ---------------------------------------------------------------------------
+# Incremental (chunked) prefill: extend an existing cache by one chunk
+# ---------------------------------------------------------------------------
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Incremental prefill needs an append-only cache the chunk can attend
+    into: uniform full-attention dense/MoE GQA stacks (the paper's Llama-2
+    testbed shape, and everything the paged backend serves).  Recurrent,
+    hybrid, windowed, MLA, encoder-decoder and modality-frontend stacks
+    fall back to whole-prompt prefill in the engine."""
+    return (set(cfg.layer_kinds()) == {ATTN}
+            and not cfg.is_encoder_decoder
+            and cfg.frontend == "text"
+            and not cfg.kv_quant
+            and cfg.window == 0)
+
+
+def prefill_chunk(params, tokens, cfg: ModelConfig, cache):
+    """Extend a ``prefill``/``init_cache``-layout cache by one prompt chunk.
+
+    tokens: (B, C) int32 at absolute positions [pos, pos+C) where
+    ``pos = cache["pos"]`` (all rows equal — the engine runs one request
+    per call).  Returns (last-token logits (B, V), cache advanced to
+    pos+C).  The chunk attends to the already-cached prefix plus itself
+    causally, so ``prefill(p)`` equals any sequence of ``prefill_chunk``
+    calls covering p — the engine's stall-free path (DESIGN.md §6).
+    Only valid when ``supports_chunked_prefill(cfg)``.
+    """
+    assert supports_chunked_prefill(cfg), \
+        f"{cfg.name}: architecture has no incremental-prefill support"
+    start = cache["pos"][0]
+    B, C = tokens.shape
+    x = embed(params["embed"], tokens).astype(dtype_of(cfg))
+    new_cache = {"pos": cache["pos"] + C, "stages": {}}
+    for i, (kind, moe_flag, _count) in enumerate(model_stages(cfg)):
+        sp = params["stages"][f"stage_{i}"]
+        sc = cache["stages"][f"stage_{i}"]
+
+        def body(h, xs, moe_flag=moe_flag):
+            lp, c = xs
+            hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            y, (k_new, v_new) = attn_mod.gqa_prefill_chunk(
+                lp["attn"], hn, c["k"], c["v"], start, cfg)
+            h = h + y
+            h2 = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            if moe_flag:
+                f, _ = moe_mod.moe_ffn(lp["ffn"], h2, cfg)
+            else:
+                f = mlp(lp["ffn"], h2, cfg.act)
+            return h + f, dict(c, k=k_new, v=v_new)
+
+        x, sc_new = jax.lax.scan(body, x, (sp, sc))
+        new_cache["stages"][f"stage_{i}"] = sc_new
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Decode: one token, scan over (params, cache) per stage
 # ---------------------------------------------------------------------------
 def _block_decode(lp, x1, c, pos, cfg, kind, moe_flag):

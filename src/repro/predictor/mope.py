@@ -48,6 +48,11 @@ class BasePredictor:
 
     def predict(self, req: Request) -> Request:
         raw = float(self.predict_tokens(req))
+        # keep the pre-bias prediction on the request: observe() must
+        # reconcile against the prediction *as made*, not against
+        # pred_output_len un-scaled by whatever the bias is at completion
+        # time (it drifts under concurrent completions)
+        req._pred_raw = raw
         if self.calibrate:
             raw *= self._bias.get(self._regime(req), 1.0)
         req.pred_output_len = max(raw, 1.0)
@@ -64,8 +69,12 @@ class BasePredictor:
         if self.calibrate and req.pred_output_len:
             r = self._regime(req)
             cal = self._bias.get(r, 1.0)
-            ratio = req.output_len / max(req.pred_output_len
-                                         / self._bias.get(r, 1.0), 1.0)
+            raw = getattr(req, "_pred_raw", None)
+            if raw is None:
+                # legacy request predicted before this fix: best effort —
+                # recover the raw prediction with the current bias
+                raw = req.pred_output_len / self._bias.get(r, 1.0)
+            ratio = req.output_len / max(raw, 1.0)
             ratio = float(np.clip(ratio, 0.1, 10.0))
             self._bias[r] = (1 - self.bias_ema) * cal + self.bias_ema * ratio
 

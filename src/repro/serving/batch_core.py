@@ -34,8 +34,9 @@ from repro.serving.costmodel import CostModel
 @dataclasses.dataclass
 class BatchConfig:
     """Knobs of the shared admission loop (defaults match the paper's
-    simulator setup; the engine overrides ``default_reserve`` and turns
-    adaptive batching off — it prefills whole prompts at admission)."""
+    simulator setup; the engine overrides ``default_reserve`` and, for
+    architectures without incremental-prefill support, falls back to
+    ``stall_free=False, adaptive_batching=False`` whole-prompt prefill)."""
     max_batch: int = 32               # L_b
     kv_budget_tokens: Optional[int] = None   # M (None -> from cost model)
     prefill_chunk: int = 512          # chunked-prefill budget per iteration
@@ -50,8 +51,8 @@ class BatchCore:
 
     Drivers call, per iteration:
         ``admit(now, batch_len)``     -> newly admitted requests
-        ``plan_prefill(running)``     -> prefill tokens this iteration
-        ``iteration_time(...)``       -> modeled iteration duration
+        ``plan_prefill(running)``     -> [(req, chunk), ...] prefill plan
+        ``iteration_time(plan, ...)`` -> modeled iteration duration
         ``complete(req, now, ...)``   -> close a finished request
     """
 
@@ -123,19 +124,29 @@ class BatchCore:
         return admitted
 
     # -- chunked prefill -----------------------------------------------------
-    def plan_prefill(self, running: List[Request]) -> int:
+    def plan_prefill(self, running: List[Request]):
         """Advance PREFILLING requests within this iteration's chunk budget
         (stall-free: running decodes never wait on a long prompt).
-        Mutates ``prefill_done``; returns prefill tokens scheduled."""
+
+        Returns the per-request chunk plan ``[(req, chunk), ...]`` in
+        ``running`` order with every ``chunk > 0``, mutating
+        ``prefill_done`` — this single method is what makes simulator and
+        engine take identical chunking decisions (the engine executes the
+        plan against the model, the simulator only times it)."""
         budget = self.cfg.prefill_chunk if self.cfg.stall_free else 1 << 30
-        total = 0
+        plan: List[tuple] = []
         for r in running:
             if r.state == PREFILLING and budget > 0:
                 chunk = min(r.prompt_len - r.prefill_done, budget)
+                if chunk <= 0:
+                    continue
                 r.prefill_done += chunk
                 budget -= chunk
-                total += chunk
-        return total
+                plan.append((r, chunk))
+                if self.observer is not None and hasattr(self.observer,
+                                                         "on_prefill_chunk"):
+                    self.observer.on_prefill_chunk(r, chunk)
+        return plan
 
     # -- timing --------------------------------------------------------------
     def refresh_overhead(self, fresh_batch: bool) -> float:
@@ -143,13 +154,26 @@ class BatchCore:
         (the Figure 2c mechanism) — the single place this rule lives."""
         return self.cm.hw.batch_overhead if fresh_batch else 0.0
 
-    def iteration_time(self, prefill_tokens: int, ctx_lens,
-                       fresh_batch: bool) -> float:
-        """Modeled duration of one iteration: chunked prefill + batched
-        decode + host-side refresh overhead when the batch changed."""
-        t = (self.cm.prefill_time(prefill_tokens) if prefill_tokens
-             else 0.0) + self.cm.decode_step_time(ctx_lens)
+    def iteration_time(self, plan, ctx_lens, fresh_batch: bool) -> float:
+        """Modeled duration of one iteration: fused chunked-prefill +
+        batched-decode pass (one weight stream — ``mixed_step_time``) +
+        host-side refresh overhead when the batch changed.  ``plan`` is
+        the ``plan_prefill`` output; each chunk is priced with the mean
+        context its tokens attend to, so a late chunk of a long prompt
+        pays full-prefix attention."""
+        chunks = [(c, (r.prefill_done - c) + c / 2) for r, c in plan]
+        t = self.cm.mixed_step_time(chunks, ctx_lens)
         return max(t + self.refresh_overhead(fresh_batch), 1e-6)
+
+    def iteration_util(self, t_iter: float, fresh_batch: bool,
+                       n_running: int) -> float:
+        """Modeled utilization of one iteration — refresh overhead is dead
+        time, and small batches underutilize the chip.  Shared so the
+        engine and the simulator feed identical Util values back to the
+        scheduler (Equinox's RFC term)."""
+        overhead = self.refresh_overhead(fresh_batch)
+        return (1.0 - overhead / max(t_iter, 1e-9)) * min(
+            n_running / max(self.cfg.max_batch * 0.25, 1), 1.0)
 
     # -- completion feedback -------------------------------------------------
     def complete(self, req: Request, now: float, util: float = None):

@@ -137,6 +137,37 @@ class CostModel:
         t_comp = flops / (self.hw.chips * self.hw.peak_flops)
         return max(t_mem, t_comp)
 
+    def mixed_step_time(self, prefill_chunks, ctx_lens) -> float:
+        """One continuous-batching iteration mixing prompt-chunk prefill
+        with a batched decode step.  The weights stream from HBM ONCE for
+        the fused pass — chunked prefill piggybacks on the decode batch's
+        weight reads (the stall-free economics; pricing ``prefill_time``
+        + ``decode_step_time`` separately double-charges the multi-GB
+        weight stream every mixed iteration).
+
+        ``prefill_chunks``: (n_tokens, avg_ctx) pairs, one per chunk,
+        where avg_ctx is the mean context its tokens attend to (start +
+        n/2 for a chunk at offset start — a late chunk of a long prompt
+        still pays full-prefix attention).  The endpoints reduce exactly
+        to ``prefill_time`` (single whole-prompt chunk, no decode) and
+        ``decode_step_time`` (no chunks)."""
+        if not prefill_chunks and not ctx_lens:
+            return 0.0                  # idle iteration: no weight stream
+        pf_flops = sum(self.flops_per_token * n
+                       + self.attn_flops_per_ctx * n * avg_ctx
+                       for n, avg_ctx in prefill_chunks)
+        b = len(ctx_lens)
+        dec_flops = b * self.flops_per_token + self.attn_flops_per_ctx \
+            * sum(min(c, 10 ** 9) for c in ctx_lens)
+        bytes_moved = self.param_bytes + sum(
+            kv_read_bytes(self.cfg, c) for c in ctx_lens)
+        t_comp = (pf_flops / (self.hw.chips * self.hw.peak_flops
+                              * self.hw.prefill_eff)
+                  + dec_flops / (self.hw.chips * self.hw.peak_flops))
+        t_mem = bytes_moved / (self.hw.chips * self.hw.hbm_bw
+                               * self.hw.bw_eff)
+        return max(t_comp, t_mem)
+
     # -- derived metrics -------------------------------------------------------
     def mfu(self, useful_tokens: float, elapsed: float) -> float:
         """Model-FLOP utilization of a window (the TPU 'Util' analogue)."""

@@ -17,12 +17,23 @@ scheduler (this container's CPU timings are not meaningful for an
 accelerator-bound system).
 
 Scheduling decisions (admission, ``canSchedule`` KV reservation, the
-completion feedback loop) are NOT re-implemented here: the engine drives
-the same ``repro.serving.batch_core.BatchCore`` as the simulator
-(DESIGN.md §6), so simulator and engine cannot drift apart.  The engine
-prefills whole prompts at admission (no chunking) and therefore runs the
-core with adaptive batching off and ``prefill_chunk`` effectively
-unbounded.  Like the simulator it exposes the replica protocol
+chunked-prefill plan, the completion feedback loop) are NOT
+re-implemented here: the engine drives the same
+``repro.serving.batch_core.BatchCore`` as the simulator (DESIGN.md §6),
+so simulator and engine cannot drift apart.  Prefill is *stall-free*:
+prompts stream in as ``prefill_chunk``-budgeted chunks
+(``models.prefill_chunk`` extends the request's cache incrementally) and
+each iteration mixes prefill-chunk rows with the batched decode of every
+DECODING request, so running decodes never wait on a long prompt and the
+engine runs with ``stall_free=True, adaptive_batching=True`` — the
+paper's TTFT mechanism, same knobs as the simulator.  Architectures
+without incremental-prefill support (``supports_chunked_prefill``) fall
+back to whole-prompt prefill at admission.
+
+Timing rule for partial prefills (the corrected TTFT definition): a
+request's first token exists only when its *last* chunk has executed, and
+is stamped after the modeled clock has advanced over that iteration —
+never at admission.  Like the simulator it exposes the replica protocol
 (``submit``/``step``/``clock``/``has_work``) for the cluster layer
 (DESIGN.md §7).
 """
@@ -36,10 +47,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, ModelConfig
-from repro.core.request import DECODING, Request
+from repro.core.request import DECODING, PREFILLING, Request
 from repro.core.schedulers import SchedulerBase
 from repro.kernels import paged_attention
-from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models import (decode_step, init_cache, init_params, prefill,
+                          prefill_chunk, supports_chunked_prefill)
 from repro.models.layers import dtype_of, embed, mlp, rmsnorm, unembed
 from repro.models.model import model_stages
 from repro.models.attention import apply_rope
@@ -56,20 +68,34 @@ class ServingEngine:
                  cost_model: Optional[CostModel] = None,
                  backend: str = "slots", page_size: int = 16,
                  seed: int = 0, sample_temp: float = 0.0,
+                 chunked: Optional[bool] = None,
+                 prefill_chunk_tokens: int = 512,
+                 target_iter_time: float = 0.25,
                  observer=None):
         self.cfg = cfg
         self.sched = scheduler
         self.max_slots = max_slots
         self.max_len = max_len
         self.cm = cost_model or CostModel(cfg)
+        if chunked is None:
+            chunked = supports_chunked_prefill(cfg)
+        elif chunked:
+            assert supports_chunked_prefill(cfg), \
+                f"{cfg.name}: no incremental-prefill support (see " \
+                "models.supports_chunked_prefill)"
+        self.chunked = chunked
         self.core = BatchCore(
             scheduler, self.cm,
             BatchConfig(max_batch=max_slots,
                         kv_budget_tokens=kv_budget_tokens
                         or max_slots * max_len,
                         default_reserve=128,      # engine's legacy reserve
-                        adaptive_batching=False,  # whole-prompt prefill
-                        stall_free=False),
+                        prefill_chunk=prefill_chunk_tokens,
+                        target_iter_time=target_iter_time,
+                        # stall-free chunked prefill + adaptive batching
+                        # when the model layer supports cache continuation
+                        adaptive_batching=chunked,
+                        stall_free=chunked),
             observer=observer)
         self.kv_budget = self.core.kv_budget
         self.sample_temp = sample_temp
@@ -91,11 +117,13 @@ class ServingEngine:
             self.cache = init_cache(cfg, max_slots, max_len)
             # inactive slots decode garbage into slot 0 tokens — masked out
         self.slots: List[Optional[Request]] = [None] * max_slots
-        self.reserved = self.core.reserved     # alias: core owns KV accounting
+        self.running: List[Request] = []    # admission order (= sim order)
+        self.reserved = self.core.reserved  # alias: core owns KV accounting
         self.t_model = 0.0            # modeled target-hardware clock
         self.t_wall0 = time.monotonic()
         self.finished: List[Request] = []
         self._prefill_jit: Dict[int, object] = {}
+        self._chunk_jit = None
         self._decode_jit = None
         self.iterations = 0
 
@@ -112,8 +140,7 @@ class ServingEngine:
         self.t_model = max(self.t_model, t)
 
     def has_work(self) -> bool:
-        return any(s is not None for s in self.slots) \
-            or self.sched.has_waiting()
+        return bool(self.running) or self.sched.has_waiting()
 
     @property
     def n_finished(self) -> int:
@@ -124,7 +151,9 @@ class ServingEngine:
 
     def queued_prompt_tokens(self) -> int:
         return sum(r.prompt_len for q in self.sched.queues.values()
-                   for r in q)
+                   for r in q) + sum(r.prompt_len - r.prefill_done
+                                     for r in self.running
+                                     if r.state == PREFILLING)
 
     def _free_slot(self) -> int:
         for i, s in enumerate(self.slots):
@@ -154,7 +183,30 @@ class ServingEngine:
             self._prefill_jit[plen] = jax.jit(fn)
         return self._prefill_jit[plen]
 
-    def _admit(self, req: Request, slot: int):
+    def _chunk_fn(self):
+        if self._chunk_jit is None:
+            cfg = self.cfg
+
+            def fn(params, tokens, cache):
+                return prefill_chunk(params, tokens, cfg, cache)
+
+            # one wrapper: jit's own cache handles per-chunk-length traces
+            self._chunk_jit = jax.jit(fn)
+        return self._chunk_jit
+
+    def _bind_slot(self, req: Request, slot: int):
+        """Admission bookkeeping only — no model work happens here.  The
+        prompt runs later through the shared chunk plan."""
+        req._slot = slot
+        req._vlm_prefix = 0
+        req._pcache = None            # slots backend: partial prefill cache
+        req._pos = 0
+        self.slots[slot] = req
+        self.running.append(req)
+
+    def _prefill_whole(self, req: Request):
+        """Legacy one-shot prompt prefill (architectures without
+        incremental-prefill support, incl. the modality frontends)."""
         tokens = jnp.asarray(req.prompt_tokens[None, :])
         if self.cfg.frontend == "vision_stub":
             # stubbed modality frontend: each request carries one image's
@@ -170,26 +222,70 @@ class ServingEngine:
         else:
             logits, cache1 = self._prefill_fn(req.prompt_len)(self.params,
                                                               tokens)
-            req._vlm_prefix = 0
+        req._pcache = cache1
+        return logits[0]
+
+    def _prefill_chunk_slots(self, req: Request, start: int, chunk: int):
+        if req._pcache is None:
+            req._pcache = init_cache(self.cfg, 1, self.max_len)
+        tokens = jnp.asarray(req.prompt_tokens[None, start:start + chunk])
+        logits, req._pcache = self._chunk_fn()(self.params, tokens,
+                                               req._pcache)
+        return logits[0]
+
+    def _prefill_chunk_paged(self, req: Request, start: int, chunk: int):
+        """Chunked prefill through the Pallas paged-attention path: write
+        the chunk's K/V into this request's pages and attend with the
+        chunk rows as a batch of staggered contexts — token i sees
+        ctx_len = start+i+1, which is exactly causal prefix+chunk
+        attention, so ``_paged_decode_step`` is reused verbatim."""
+        self.pool.ensure(req.rid, start + chunk)
+        width = self.pool.pages_needed(self.max_len)   # static jit shape
+        bt = np.tile(self.pool.block_table([req.rid], width), (chunk, 1))
+        ctx = start + np.arange(chunk, dtype=np.int32)
+        tokens = req.prompt_tokens[start:start + chunk]
+        logits, self.k_pools, self.v_pools = _paged_decode_step(
+            self.params, jnp.asarray(tokens), jnp.asarray(ctx),
+            jnp.asarray(bt), self.k_pools, self.v_pools, self.cfg,
+            self.pool.page_size)
+        return logits[-1]
+
+    def _run_prefill(self, req: Request, start: int, chunk: int):
+        """Execute one planned chunk; returns the last-token logits row
+        (meaningful only when this chunk completes the prompt)."""
+        if not self.chunked:
+            assert start == 0 and chunk == req.prompt_len
+            return self._prefill_whole(req)
         if self.backend == "paged":
-            self.pool.alloc(req.rid, req.prompt_len + 1)
-            # copy contiguous prefill cache into this request's pages
-            sc = cache1["stages"]["stage_0"]
-            pages = self.pool.owned[req.rid]
-            ps = self.pool.page_size
-            k = sc["k"][:, 0]                     # (L, S_c, Hkv, D)
-            v = sc["v"][:, 0]
-            for pi, pg in enumerate(pages):
-                lo = pi * ps
-                if lo >= req.prompt_len:
-                    break
-                hi = min(lo + ps, req.prompt_len)
-                kc, vc = k[:, lo:hi], v[:, lo:hi]
-                if hi - lo < ps:
-                    pad = ((0, 0), (0, ps - (hi - lo)), (0, 0), (0, 0))
-                    kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
-                self.k_pools = self.k_pools.at[:, pg].set(kc)
-                self.v_pools = self.v_pools.at[:, pg].set(vc)
+            return self._prefill_chunk_paged(req, start, chunk)
+        return self._prefill_chunk_slots(req, start, chunk)
+
+    def _install_prefill(self, req: Request, row):
+        """Prompt fully prefilled: make the request decodable.  For the
+        slots backend the per-request partial cache is copied into its
+        slot here (after this iteration's decode, so the full-width decode
+        step never clobbers a partially prefilled slot)."""
+        slot = req._slot
+        if self.backend == "paged":
+            if not self.chunked:
+                # copy contiguous prefill cache into this request's pages
+                self.pool.alloc(req.rid, req.prompt_len + 1)
+                sc = req._pcache["stages"]["stage_0"]
+                pages = self.pool.owned[req.rid]
+                ps = self.pool.page_size
+                k = sc["k"][:, 0]                     # (L, S_c, Hkv, D)
+                v = sc["v"][:, 0]
+                for pi, pg in enumerate(pages):
+                    lo = pi * ps
+                    if lo >= req.prompt_len:
+                        break
+                    hi = min(lo + ps, req.prompt_len)
+                    kc, vc = k[:, lo:hi], v[:, lo:hi]
+                    if hi - lo < ps:
+                        pad = ((0, 0), (0, ps - (hi - lo)), (0, 0), (0, 0))
+                        kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+                    self.k_pools = self.k_pools.at[:, pg].set(kc)
+                    self.v_pools = self.v_pools.at[:, pg].set(vc)
         else:
             def put(dst, src):
                 return dst.at[:, slot].set(src[:, 0])
@@ -197,15 +293,12 @@ class ServingEngine:
                 key = f"stage_{i}"
                 self.cache["stages"][key] = jax.tree.map(
                     put, self.cache["stages"][key],
-                    cache1["stages"][key])
+                    req._pcache["stages"][key])
             self.cache["pos"] = self.cache["pos"].at[slot].set(
                 req.prompt_len + req._vlm_prefix)
-        req._next_token = int(jnp.argmax(logits[0]))
+        req._pcache = None
+        req._next_token = int(jnp.argmax(row))
         req._pos = req.prompt_len + req._vlm_prefix
-        req.state = DECODING
-        req.generated = 1                      # prefill emits first token
-        req.first_token_time = self.now()
-        self.slots[slot] = req
 
     # -- decode -------------------------------------------------------------------
     def _decode_slots(self, tokens_np):
@@ -220,8 +313,7 @@ class ServingEngine:
             self.params, jnp.asarray(tokens_np), self.cache)
         return logits
 
-    def _decode_paged(self, tokens_np, active_idx):
-        reqs = [self.slots[i] for i in active_idx]
+    def _decode_paged(self, tokens_np, reqs):
         ctx = np.array([r._pos for r in reqs], np.int32)
         for r in reqs:
             self.pool.extend(r.rid, r._pos, r._pos + 1)
@@ -233,9 +325,34 @@ class ServingEngine:
             self.pool.page_size)
         return logits
 
+    def _decode(self, decoding: List[Request]):
+        """Batched one-token decode; returns {rid: logits row (np)}."""
+        if not decoding:
+            return {}
+        if self.backend == "paged":
+            tokens = np.array([r._next_token for r in decoding], np.int32)
+            logits = np.asarray(self._decode_paged(tokens, decoding),
+                                np.float32)
+            return {r.rid: logits[i] for i, r in enumerate(decoding)}
+        tokens = np.zeros(self.max_slots, np.int32)
+        for r in decoding:
+            tokens[r._slot] = r._next_token
+        logits = np.asarray(self._decode_slots(tokens), np.float32)
+        return {r.rid: logits[r._slot] for r in decoding}
+
+    def _sample(self, row) -> int:
+        if self.sample_temp > 0:
+            self.rng, sub = jax.random.split(self.rng)
+            return int(jax.random.categorical(
+                sub, jnp.asarray(row) / self.sample_temp))
+        return int(np.argmax(row))
+
     # -- main loop -----------------------------------------------------------------
     def step(self):
-        """One continuous-batching iteration.  Returns #active requests."""
+        """One continuous-batching iteration (mirrors ``Simulator.step``
+        statement for statement — both drive the shared BatchCore).
+        Returns #running requests (1 when only quota-blocked queued work
+        exists — the clock still advanced), 0 when idle."""
         now = self.now()
         # 1. admission (Algorithm 1 inner loop, shared BatchCore)
         admitted = []
@@ -243,65 +360,78 @@ class ServingEngine:
             slot = self._free_slot()
             if slot < 0:
                 break
-            batch_len = sum(s is not None for s in self.slots)
-            req = self.core.try_admit(now, batch_len)
+            req = self.core.try_admit(now, len(self.running))
             if req is None:
                 break
-            self._admit(req, slot)              # whole-prompt prefill
-            self.sched.on_token(req, now, 1)
+            self._bind_slot(req, slot)
             admitted.append(req)
+        if not self.running:
+            if not self.sched.has_waiting():
+                return 0
+            # quota/window-blocked scheduler (e.g. RPM): nothing popped
+            # but requests are queued — run an empty iteration so the
+            # modeled clock advances to when the scheduler unblocks,
+            # exactly as Simulator.step does
+            self.t_model += self.core.iteration_time([], [], True)
+            self.iterations += 1
+            return 1
 
-        active_idx = [i for i, s in enumerate(self.slots) if s is not None]
-        if not active_idx and not admitted:
-            return 0
+        # 2. chunked prefill (per-request plan shared with the simulator)
+        plan = self.core.plan_prefill(self.running)
+        done_prefill = []
+        for req, chunk in plan:
+            row = self._run_prefill(req, req.prefill_done - chunk, chunk)
+            if req.prefill_done >= req.prompt_len:
+                done_prefill.append((req, row))
 
-        # 2. batched decode
-        if self.backend == "paged":
-            tokens = np.array([self.slots[i]._next_token for i in active_idx],
-                              np.int32)
-            logits = self._decode_paged(tokens, active_idx)
-            rows = {si: row for row, si in enumerate(active_idx)}
-        else:
-            tokens = np.zeros(self.max_slots, np.int32)
-            for i in active_idx:
-                tokens[i] = self.slots[i]._next_token
-            logits = self._decode_slots(tokens)
-            rows = {si: si for si in active_idx}
+        # 3. batched decode of every request that was DECODING at
+        #    iteration start (requests finishing prefill this iteration
+        #    emit their first token below and decode from the next one)
+        decoding = [r for r in self.running if r.state == DECODING]
+        rows = self._decode(decoding)
 
-        # 3. modeled clock advance (timing rule shared with the simulator)
-        prefill_tokens = sum(r.prompt_len for r in admitted)
-        ctxs = [self.slots[i]._pos for i in active_idx]
-        self.t_model += self.core.iteration_time(prefill_tokens, ctxs,
-                                                 bool(admitted))
+        # 4. modeled clock advance (timing rule shared with the simulator)
+        ctxs = [r.prompt_len + r.generated for r in decoding]
+        fresh = bool(admitted)
+        t_iter = self.core.iteration_time(plan, ctxs, fresh)
+        self.t_model += t_iter
         now = self.now()
+        util = self.core.iteration_util(t_iter, fresh, len(self.running))
 
-        # 4. sampling + lifecycle
-        logits_np = np.asarray(logits, np.float32)
-        for si in active_idx:
-            req = self.slots[si]
-            row = logits_np[rows[si]]
-            if self.sample_temp > 0:
-                self.rng, sub = jax.random.split(self.rng)
-                nxt = int(jax.random.categorical(
-                    sub, jnp.asarray(row) / self.sample_temp))
-            else:
-                nxt = int(np.argmax(row))
-            req._next_token = nxt
+        # 5. lifecycle.  First-token time is stamped here, *after* the
+        #    clock advanced over the iteration that completed the prompt —
+        #    stamping at admission under-reported TTFT by the entire
+        #    prefill iteration.
+        done_now = []
+        for req, row in done_prefill:
+            self._install_prefill(req, row)
+            req.state = DECODING
+            req.generated = 1              # prefill emits first token
+            req.first_token_time = now
+            self.sched.on_token(req, now, 1)
+            if req.generated >= req.output_len:
+                done_now.append(req)
+        for req in decoding:
+            req._next_token = self._sample(rows[req.rid])
             req._pos += 1
             req.generated += 1
             self.sched.on_token(req, now, 1)
             if req.generated >= req.output_len:   # synthetic EOS
-                # completion feedback through the shared BatchCore
-                # (frees the KV reservation, defaults util to cm.mfu)
-                self.core.complete(req, now)
-                self.finished.append(req)
-                if self.backend == "paged":
-                    self.pool.free_request(req.rid)
-                self.slots[si] = None
-        self.iterations += 1
-        return len(active_idx)
+                done_now.append(req)
 
-    def run(self, requests: List[Request], max_iters: int = 100_000):
+        # completions -> feedback loop (BatchCore closes Algorithm 1)
+        n_running = len(self.running)
+        for req in done_now:
+            self.core.complete(req, now, util=util)
+            self.finished.append(req)
+            if self.backend == "paged":
+                self.pool.free_request(req.rid)
+            self.slots[req._slot] = None
+            self.running.remove(req)
+        self.iterations += 1
+        return n_running
+
+    def run(self, requests: List[Request], max_iters: int = 1_000_000):
         """Submit everything (arrivals honored on the modeled clock) and
         run to completion."""
         pending = sorted(requests, key=lambda r: r.arrival)
@@ -328,7 +458,12 @@ import functools
 def _paged_decode_step(params, tokens, ctx_lens, block_tables, k_pools,
                        v_pools, cfg: ModelConfig, page_size: int):
     """tokens: (B,); ctx_lens: (B,) current lengths (new token appended at
-    position ctx_lens[b]); block_tables: (B, W)."""
+    position ctx_lens[b]); block_tables: (B, W).
+
+    Also the chunked-prefill step: a prompt chunk is a batch of rows over
+    ONE request's pages with staggered ctx_lens (start+1 .. start+C) —
+    each row writes its K/V then attends its causal prefix through the
+    same Pallas paged-attention kernel."""
     B = tokens.shape[0]
     x = embed(params["embed"], tokens)[:, None].astype(dtype_of(cfg))
     pos = ctx_lens

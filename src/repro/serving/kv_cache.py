@@ -45,6 +45,14 @@ class PagePool:
             return []
         return self.alloc(rid, (need - have) * self.page_size)
 
+    def ensure(self, rid: int, n_tokens: int) -> List[int]:
+        """Grow ``rid``'s allocation to cover ``n_tokens`` and return its
+        page list.  Chunked prefill allocates pages per chunk as the
+        prompt streams in, instead of the whole prompt at admission."""
+        self.extend(rid, len(self.owned.get(rid, ())) * self.page_size,
+                    n_tokens)
+        return self.owned.setdefault(rid, [])
+
     def free_request(self, rid: int):
         self.free.extend(reversed(self.owned.pop(rid, [])))
 

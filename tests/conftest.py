@@ -1,4 +1,6 @@
+import importlib.util
 import os
+import signal
 import sys
 
 # tests run on the single real CPU device — the 512-device dry-run env
@@ -7,6 +9,43 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+# Deadlock guard: a scheduling bug (e.g. an admission loop that never
+# becomes work-conserving) must fail fast, not hang the suite.  CI
+# installs pytest-timeout (see pyproject's ``timeout`` ini); offline
+# containers without the plugin get a SIGALRM-based per-test fallback.
+_HAVE_TIMEOUT_PLUGIN = importlib.util.find_spec("pytest_timeout") is not None
+_FALLBACK_TIMEOUT_S = 300
+
+
+def pytest_addoption(parser):
+    if not _HAVE_TIMEOUT_PLUGIN:
+        # claim the same ini key pytest-timeout would, so pyproject's
+        # ``timeout = …`` setting neither warns nor goes unused
+        parser.addini("timeout", "per-test timeout in seconds "
+                      "(pytest-timeout fallback)",
+                      default=str(_FALLBACK_TIMEOUT_S))
+
+
+@pytest.fixture(autouse=True)
+def _test_timeout(request):
+    if _HAVE_TIMEOUT_PLUGIN or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    limit = int(float(request.config.getini("timeout")
+                      or _FALLBACK_TIMEOUT_S))
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded {limit}s (deadlock guard, see tests/conftest.py)")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(limit)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture

@@ -25,13 +25,18 @@ def mk_reqs(n=10, seed=0, clients=2, arrival_step=0.0):
 
 
 class AdmitSpy:
-    """Observer recording the admission order (the scheduling decision)."""
+    """Observer recording admission order and per-iteration chunk plans
+    (the two scheduling decisions BatchCore owns)."""
 
     def __init__(self):
         self.order = []
+        self.chunks = []
 
     def on_admit(self, req, now):
         self.order.append(req.rid)
+
+    def on_prefill_chunk(self, req, chunk):
+        self.chunks.append((req.rid, chunk))
 
     def on_complete(self, req, now, **kw):
         pass
@@ -108,10 +113,11 @@ def test_chunked_prefill_budget(cm):
                      BatchConfig(prefill_chunk=64))
     reqs = [Request(rid=i, client="c", arrival=0.0, prompt_len=100,
                     output_len=4, state="prefilling") for i in range(3)]
-    total = core.plan_prefill(reqs)
-    assert total == 64                       # stall-free cap
+    plan = core.plan_prefill(reqs)
+    assert [(r.rid, c) for r, c in plan] == [(0, 64)]   # stall-free cap
     assert reqs[0].prefill_done == 64 and reqs[1].prefill_done == 0
-    assert core.plan_prefill(reqs) == 64     # 36 rest of r0 + 28 of r1
+    plan = core.plan_prefill(reqs)           # 36 rest of r0 + 28 of r1
+    assert [(r.rid, c) for r, c in plan] == [(0, 36), (1, 28)]
     assert reqs[0].prefill_done == 100 and reqs[1].prefill_done == 28
 
 
@@ -158,6 +164,50 @@ def test_simulator_engine_vtc_decisions_equivalent(cm):
         counts_s[cs] = counts_s.get(cs, 0) + 1
         for c in set(counts_e) | set(counts_s):
             assert abs(counts_e.get(c, 0) - counts_s.get(c, 0)) <= 1
+
+
+def test_stallfree_parity_admission_chunks_ttft(cm):
+    """Tentpole invariant: with ``stall_free=True, adaptive_batching=True``
+    on BOTH frontends, the engine takes the same admission decisions, the
+    same per-request chunking decisions AND reports the same TTFT /
+    end-to-end latency as the simulator on a shared trace (both clocks
+    are driven by identical cost-model arithmetic)."""
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    n = 12
+    espy = AdmitSpy()
+    eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=4,
+                        max_len=64, kv_budget_tokens=2000, cost_model=cm,
+                        chunked=True, prefill_chunk_tokens=8,
+                        observer=espy)
+    assert eng.core.cfg.stall_free and eng.core.cfg.adaptive_batching
+    done = eng.run(mk_reqs(n=n))
+    assert len(done) == n
+    # prompts are 8..23 tokens with an 8-token budget: chunking must occur
+    per_rid = {}
+    for rid, _c in espy.chunks:
+        per_rid[rid] = per_rid.get(rid, 0) + 1
+    assert max(per_rid.values()) >= 2
+
+    sspy = AdmitSpy()
+    sim = Simulator(cm, make_scheduler("fcfs"),
+                    SimConfig(max_batch=4, kv_budget_tokens=2000,
+                              default_reserve=128, prefill_chunk=8,
+                              stall_free=True, adaptive_batching=True),
+                    observer=sspy)
+    res = sim.run(mk_reqs(n=n))
+    assert all(r.state == "finished" for r in res.requests)
+
+    assert espy.order == sspy.order          # identical admission decisions
+    assert espy.chunks == sspy.chunks        # identical chunking decisions
+    e_ttft = {r.rid: r.ttft() for r in done}
+    s_ttft = {r.rid: r.ttft() for r in res.requests}
+    assert set(e_ttft) == set(s_ttft)
+    for rid in e_ttft:                       # identical latency accounting
+        assert e_ttft[rid] == pytest.approx(s_ttft[rid], abs=1e-9)
+    e_lat = {r.rid: r.e2e_latency() for r in done}
+    s_lat = {r.rid: r.e2e_latency() for r in res.requests}
+    for rid in e_lat:
+        assert e_lat[rid] == pytest.approx(s_lat[rid], abs=1e-9)
 
 
 def test_engine_and_simulator_share_core_class(cm):

@@ -123,13 +123,15 @@ def test_every_policy_completes_and_balances(cm, policy):
 
 def test_cluster_throughput_scales_and_ttft_drops(cm):
     """The cluster_scaling benchmark's headline curve, in miniature."""
-    wl = overload(duration=6.0)
+    # duration sized so even 4 replicas stay saturated to the cutoff
+    # (the fused mixed-iteration timing made single replicas faster)
+    wl = overload(duration=12.0)
     stats = {}
     for n in (1, 4):
         cl = make_sim_cluster(n, cm, scheduler="vtc", policy="least_kv",
                               sim_cfg=SimConfig(max_batch=16,
                                                 kv_budget_tokens=16000))
-        stats[n] = cl.run(wl if n == 1 else overload(duration=6.0),
+        stats[n] = cl.run(wl if n == 1 else overload(duration=12.0),
                           max_time=30.0).summary()
     assert stats[4]["throughput_tok_s"] > 1.5 * stats[1]["throughput_tok_s"]
     assert stats[4]["p50_ttft"] < stats[1]["p50_ttft"]

@@ -88,3 +88,42 @@ def test_online_bias_calibration(cm, data):
         mope.observe(req, latency=1.0, tps=10.0, util=0.5)
     later = mope.predict(req).pred_output_len
     assert abs(later - 400) < abs(first - 400)
+
+
+def test_bias_reconciles_against_prediction_as_made(cm):
+    """Regression: ``observe`` must de-bias with the prediction *as made*
+    (stored raw value), not by un-scaling ``pred_output_len`` with the
+    *current* bias — under concurrent completions the bias drifts between
+    predict() and observe(), and the EMA would chase itself."""
+    pred = Oracle(cm, calibrate=True)
+    pred.predict_tokens = lambda req: 100.0          # fixed raw prediction
+    req = Request(rid=0, client="c", arrival=0.0, prompt_len=16,
+                  output_len=50, keywords=("qa",))
+    pred.predict(req)                                # bias=1 -> pred 100
+    assert req._pred_raw == 100.0
+    # another request completes meanwhile and moves the regime bias
+    pred._bias[0] = 2.0
+    pred.observe(req, latency=1.0, tps=10.0, util=0.5)
+    # correct ratio is actual/raw = 50/100 = 0.5; the old code computed
+    # 50 / (100 / 2.0) = 1.0 and left the EMA chasing the drifted bias
+    ema = pred.bias_ema
+    assert pred._bias[0] == pytest.approx((1 - ema) * 2.0 + ema * 0.5)
+
+
+def test_bias_converges_under_concurrent_completions(cm):
+    """With many in-flight requests predicted before earlier ones
+    complete, the EMA must converge to the true actual/predicted ratio
+    instead of oscillating."""
+    pred = Oracle(cm, calibrate=True)
+    pred.predict_tokens = lambda req: 100.0
+    reqs = [Request(rid=i, client="c", arrival=0.0, prompt_len=16,
+                    output_len=50, keywords=("qa",)) for i in range(200)]
+    # predict in batches of 8, complete the previous batch afterwards —
+    # every observe() runs under a bias that moved since its predict()
+    for lo in range(0, 200, 8):
+        batch = reqs[lo:lo + 8]
+        for r in batch:
+            pred.predict(r)
+        for r in batch:
+            pred.observe(r, latency=1.0, tps=10.0, util=0.5)
+    assert pred._bias[0] == pytest.approx(0.5, rel=0.05)

@@ -45,6 +45,26 @@ def test_rpm_quota_blocks():
     assert s.pop_next(61.0).rid == 2          # window rolled
 
 
+def test_new_client_hook_fires_once_per_client():
+    """Regression: ``on_arrival`` tracked clients in a list with an O(n)
+    scan per request (O(n²) over an LMSYS trace).  ``arrived_clients`` is
+    a set now, and the new-client hook (the VTC lift) still fires exactly
+    once per client — including re-arrivals after the queue drained."""
+    s = VTC()
+    fired = []
+    s._on_new_client = lambda c: (fired.append(c),
+                                  s.counter.setdefault(c, 0.0))
+    for i in range(50):
+        s.on_arrival(_req(i, f"c{i % 3}", float(i)), float(i))
+    assert fired == ["c0", "c1", "c2"]
+    assert s.arrived_clients == {"c0", "c1", "c2"}
+    # drain c0 completely and let it come back: no second hook call
+    while s.queues["c0"]:
+        s.queues["c0"].popleft()
+    s.on_arrival(_req(99, "c0", 99.0), 99.0)
+    assert fired == ["c0", "c1", "c2"]
+
+
 def test_vtc_min_counter_selection():
     s = VTC()
     s.on_arrival(_req(0, "a", 0.0, p=100), 0.0)
