@@ -1,0 +1,145 @@
+"""Shared-prefix radix KV cache on a multi-turn trace (DESIGN.md §9).
+
+Serves the same multi-turn ShareGPT-like conversation trace three ways:
+
+- ``off``       — one replica, no prefix cache (every turn re-prefills
+                  its whole concatenated history);
+- ``on``        — one replica with the radix prefix cache (turn k+1
+                  reuses turn k's page-aligned KV prefix);
+- routing duel  — a 4-replica cluster, ``prefix_affinity`` vs
+                  ``round_robin``, both with per-replica caches: KV
+                  reuse is replica-local, so scattering a conversation's
+                  turns destroys its hit rate while affinity routing
+                  preserves it.
+
+Reports token-level hit rate, TTFT p50/p99, modeled throughput and
+Jain's index.  Gates (CI ``--smoke``): cache-on must cut p50 TTFT by
+>= 20% at equal-or-better throughput, and ``prefix_affinity`` must beat
+``round_robin``'s hit rate on the 4-replica cluster.
+
+    PYTHONPATH=src python benchmarks/prefix_cache.py [--smoke]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SimConfig, Simulator, make_scheduler
+from repro.serving.cluster import make_sim_cluster
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import multiturn_sharegpt_like
+
+CM = CostModel(get_config("llama2-7b"), A100_80G)
+
+FULL = dict(n_clients=16, n_conversations=4, think_time=3.0,
+            max_batch=16, kv_budget=120_000, n_replicas=4)
+SMOKE = dict(n_clients=6, n_conversations=2, think_time=3.0,
+             max_batch=16, kv_budget=120_000, n_replicas=4)
+
+
+def _trace(p, seed=11):
+    return multiturn_sharegpt_like(n_clients=p["n_clients"],
+                                   n_conversations=p["n_conversations"],
+                                   think_time=p["think_time"], seed=seed)
+
+
+def _simcfg(p, cache: bool) -> SimConfig:
+    return SimConfig(max_batch=p["max_batch"],
+                     kv_budget_tokens=p["kv_budget"], prefix_cache=cache)
+
+
+def _metrics(requests, sim_time, sched, hit_rate):
+    ttfts = np.array([r.ttft() for r in requests if r.ttft() is not None])
+    thr = sum(r.prompt_len + r.generated for r in requests
+              if r.state == "finished") / max(sim_time, 1e-9)
+    xs = np.array([v for v in sched.fairness_scores().values() if v > 0])
+    jain = float(xs.sum() ** 2 / (len(xs) * np.sum(xs ** 2))) if len(xs) \
+        else 1.0
+    return dict(p50=float(np.percentile(ttfts, 50)),
+                p99=float(np.percentile(ttfts, 99)), thr=float(thr),
+                jain=jain, hit=hit_rate,
+                n=sum(r.state == "finished" for r in requests))
+
+
+def _serve_single(p, reqs, cache: bool):
+    sim = Simulator(CM, make_scheduler("vtc"), _simcfg(p, cache))
+    t0 = time.monotonic()
+    res = sim.run([dataclasses.replace(r) for r in reqs])
+    wall = time.monotonic() - t0
+    hit = (sim.core.prefix_cache.stats.hit_rate()
+           if sim.core.prefix_cache else 0.0)
+    return _metrics(res.requests, res.sim_time, sim.sched, hit), wall
+
+
+def _serve_cluster(p, reqs, policy: str):
+    cl = make_sim_cluster(p["n_replicas"], CM, scheduler="vtc",
+                          policy=policy, sim_cfg=_simcfg(p, True))
+    t0 = time.monotonic()
+    res = cl.run([dataclasses.replace(r) for r in reqs])
+    wall = time.monotonic() - t0
+    m = _metrics(res.requests, res.sim_time, res.scheduler,
+                 res.cache_hit_rate() or 0.0)
+    return m, wall
+
+
+def run(quick: bool = False):
+    p = SMOKE if quick else FULL
+    reqs = _trace(p)
+    out = []
+
+    single = {}
+    for mode in ("off", "on"):
+        m, wall = _serve_single(p, reqs, cache=(mode == "on"))
+        single[mode] = m
+        out.append(f"prefix_cache/{mode},{wall * 1e6:.0f},"
+                   f"served={m['n']} hit={m['hit']:.3f} "
+                   f"p50ttft={m['p50']:.4f}s p99ttft={m['p99']:.4f}s "
+                   f"thr={m['thr']:.0f}tok/s jain={m['jain']:.3f}")
+
+    routed = {}
+    for policy in ("round_robin", "prefix_affinity"):
+        m, wall = _serve_cluster(p, reqs, policy)
+        routed[policy] = m
+        out.append(f"prefix_cache/route_{policy},{wall * 1e6:.0f},"
+                   f"served={m['n']} hit={m['hit']:.3f} "
+                   f"p50ttft={m['p50']:.4f}s thr={m['thr']:.0f}tok/s "
+                   f"jain={m['jain']:.3f}")
+
+    p50_win = 1.0 - single["on"]["p50"] / max(single["off"]["p50"], 1e-12)
+    thr_ratio = single["on"]["thr"] / max(single["off"]["thr"], 1e-12)
+    affinity_win = (routed["prefix_affinity"]["hit"]
+                    - routed["round_robin"]["hit"])
+    ok = p50_win >= 0.20 and thr_ratio >= 0.999 and affinity_win > 0
+    out.append(f"prefix_cache/summary,0,"
+               f"p50_ttft_reduction={p50_win * 100:.1f}% "
+               f"thr_ratio={thr_ratio:.3f} "
+               f"hit_on={single['on']['hit']:.3f} "
+               f"affinity_hit={routed['prefix_affinity']['hit']:.3f} "
+               f"rr_hit={routed['round_robin']['hit']:.3f} "
+               f"ok={ok}")
+    return out
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI (<1 min)")
+    args = ap.parse_args()
+    lines = run(quick=args.smoke)
+    for line in lines:
+        print(line, flush=True)
+    ok = lines[-1].rsplit("ok=", 1)[-1] == "True"
+    if not ok:
+        raise SystemExit(
+            "prefix cache failed its gates: need >=20% p50 TTFT reduction "
+            "at equal-or-better throughput, and prefix_affinity beating "
+            "round_robin hit rate")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,8 @@ BENCHES = [
     ("trace_serving", "Fig 11/12: ShareGPT-like trace on the real engine"),
     ("ttft_stallfree", "Sec 2/7: stall-free chunked prefill vs whole-prompt"
                        " TTFT on the real engine"),
+    ("prefix_cache", "DESIGN.md §9: shared-prefix radix KV cache + "
+                     "prefix-affinity routing on a multiturn trace"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),

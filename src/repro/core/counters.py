@@ -13,6 +13,16 @@ Formulas (paper §3.1–3.3):
     RFC += ω_f · TPS · Util
     HF_f = α · norm(UFC_f) + β · norm(RFC_f),   α + β = 1
 Scheduling = max-min: serve the client with the smallest HF.
+
+Beyond-paper extension (DESIGN.md §9): with the shared-prefix radix KV
+cache, ``T_in_cached`` of a request's input tokens were served from the
+cache and cost the operator almost nothing — charging them like computed
+tokens over-bills conversational clients, while charging them zero lets
+a client farm free service from its own history.  ``ufc_increment``
+therefore bills cached input tokens at a tunable discount weight
+``omega_cached`` ∈ [0, 1] (1 = paper behavior, cache-blind):
+
+    T_in_effective = (T_in − T_in_cached) + ω_cached · T_in_cached
 """
 from __future__ import annotations
 
@@ -31,9 +41,19 @@ DEFAULT_BETA = 0.3
 # ---------------------------------------------------------------------------
 # scalar / numpy (host) versions
 # ---------------------------------------------------------------------------
+def billable_input(t_in: float, t_in_cached: float = 0.0,
+                   omega_cached: float = 1.0) -> float:
+    """Effective input tokens after the cached-prefix discount
+    (DESIGN.md §9); ``omega_cached=1`` reproduces the paper exactly."""
+    return (t_in - t_in_cached) + omega_cached * t_in_cached
+
+
 def ufc_increment(t_in: float, t_out: float, wait: float, predict_time: float,
-                  omega: float = 1.0, delta: float = DEFAULT_DELTA) -> float:
-    service = t_in + OUT_TOKEN_WEIGHT * t_out
+                  omega: float = 1.0, delta: float = DEFAULT_DELTA,
+                  t_in_cached: float = 0.0,
+                  omega_cached: float = 1.0) -> float:
+    service = (billable_input(t_in, t_in_cached, omega_cached)
+               + OUT_TOKEN_WEIGHT * t_out)
     return omega * service / (1.0 + delta * (wait + predict_time))
 
 
@@ -65,8 +85,9 @@ def select_min_hf(ufc, rfc, active_mask, alpha=DEFAULT_ALPHA,
 # ---------------------------------------------------------------------------
 @jax.jit
 def ufc_update_jax(ufc, client_idx, t_in, t_out, wait, predict_time, omega,
-                   delta=DEFAULT_DELTA):
-    service = t_in + OUT_TOKEN_WEIGHT * t_out
+                   delta=DEFAULT_DELTA, t_in_cached=0.0, omega_cached=1.0):
+    service = ((t_in - t_in_cached) + omega_cached * t_in_cached
+               + OUT_TOKEN_WEIGHT * t_out)
     inc = omega * service / (1.0 + delta * (wait + predict_time))
     return ufc.at[client_idx].add(inc)
 
@@ -150,3 +171,7 @@ class HFParams:
     # tracking VTC-tight while predictions still steer admission order,
     # RFC and the latency tilt).
     charging: str = "incremental"
+    # Cached-token discount (DESIGN.md §9): weight applied to input tokens
+    # served from the shared-prefix KV cache.  1.0 = cache-blind (paper);
+    # 0.0 = cached tokens free.
+    omega_cached: float = 1.0

@@ -36,7 +36,10 @@ class Request:
     finish_time: Optional[float] = None
     generated: int = 0
     prefill_done: int = 0               # chunked-prefill progress
-    prompt_tokens: Optional[np.ndarray] = None   # engine path only
+    cached_prefix: int = 0              # prompt tokens served from the
+    #                                     shared-prefix cache (DESIGN.md §9)
+    prompt_tokens: Optional[np.ndarray] = None   # token ids (engine decode,
+    #                                     radix prefix keys, affinity routing)
 
     # -- derived -------------------------------------------------------------
     @property

@@ -16,6 +16,7 @@ weighted tokens, input counted at admit, output counted as generated.
 from __future__ import annotations
 
 import collections
+import dataclasses
 from typing import Dict, Optional
 
 import numpy as np
@@ -26,6 +27,10 @@ from repro.core.request import Request
 
 class SchedulerBase:
     name = "base"
+    # Cached-token discount (DESIGN.md §9): input tokens served from the
+    # shared-prefix KV cache are billed at this weight (1.0 = cache-blind).
+    # Settable per policy via ``make_scheduler(..., omega_cached=...)``.
+    omega_cached: float = 1.0
 
     def __init__(self):
         self.queues: Dict[str, collections.deque] = collections.defaultdict(
@@ -34,6 +39,13 @@ class SchedulerBase:
         # set, not list: on_arrival runs once per request, and an O(n) list
         # scan here is O(n²) over an LMSYS-sized trace
         self.arrived_clients = set()
+
+    def billable_input(self, req: Request) -> float:
+        """Input tokens after the cached-prefix discount: a cache-hit
+        prompt re-used ``req.cached_prefix`` tokens of resident KV, so
+        those are billed at ``omega_cached`` instead of full price."""
+        return C.billable_input(req.prompt_len, req.cached_prefix,
+                                self.omega_cached)
 
     # -- queue plumbing ------------------------------------------------------
     def on_arrival(self, req: Request, now: float):
@@ -53,7 +65,7 @@ class SchedulerBase:
 
     # -- service accounting ----------------------------------------------------
     def on_admit(self, req: Request, now: float):
-        self.service[req.client] += req.weight * req.prompt_len
+        self.service[req.client] += req.weight * self.billable_input(req)
 
     def on_token(self, req: Request, now: float, n: int = 1):
         self.service[req.client] += req.weight * C.OUT_TOKEN_WEIGHT * n
@@ -159,7 +171,7 @@ class VTC(SchedulerBase):
 
     def on_admit(self, req, now):
         super().on_admit(req, now)
-        self.counter[req.client] += req.weight * req.prompt_len
+        self.counter[req.client] += req.weight * self.billable_input(req)
         if self.predictor is not None:
             self.predictor.predict(req)
             self.counter[req.client] += (req.weight * self.w
@@ -193,6 +205,7 @@ class Equinox(SchedulerBase):
     def __init__(self, predictor, params: C.HFParams = C.HFParams()):
         super().__init__()
         self.p = params
+        self.omega_cached = params.omega_cached
         self.predictor = predictor
         self.ufc: Dict[str, float] = {}
         self.rfc: Dict[str, float] = {}
@@ -244,13 +257,14 @@ class Equinox(SchedulerBase):
         req._tilt = tilt
         self.ufc.setdefault(req.client, 0.0)
         if self.p.charging == "upfront":
-            ufc_inc = (req.weight * (req.prompt_len + C.OUT_TOKEN_WEIGHT
+            ufc_inc = (req.weight * (self.billable_input(req)
+                                     + C.OUT_TOKEN_WEIGHT
                                      * req.pred_output_len) / tilt)
             self.ufc[req.client] += ufc_inc
             req._ufc_charged = ufc_inc
         else:
             # incremental: charge the prompt now, outputs as produced
-            inc = req.weight * req.prompt_len / tilt
+            inc = req.weight * self.billable_input(req) / tilt
             self.ufc[req.client] += inc
             req._ufc_charged = inc
 
@@ -270,7 +284,9 @@ class Equinox(SchedulerBase):
             lat = self._norm_latency(getattr(req, "_admit_wait", 0.0)
                                      + latency)
             actual = C.ufc_increment(req.prompt_len, req.generated, lat, 0.0,
-                                     req.weight, self.p.delta)
+                                     req.weight, self.p.delta,
+                                     t_in_cached=req.cached_prefix,
+                                     omega_cached=self.omega_cached)
             self.ufc[req.client] += actual - getattr(req, "_ufc_charged",
                                                      actual)
         actual_rfc = C.rfc_increment(tps, util, req.weight)
@@ -282,15 +298,23 @@ class Equinox(SchedulerBase):
         return self._hf()
 
 
-def make_scheduler(name: str, predictor=None, **kw):
+def make_scheduler(name: str, predictor=None, omega_cached: float = None,
+                   **kw):
     name = name.lower()
     if name == "fcfs":
-        return FCFS()
-    if name == "rpm":
-        return RPM(**kw)
-    if name == "vtc":
-        return VTC(predictor=predictor, **kw)
-    if name == "equinox":
+        sched = FCFS()
+    elif name == "rpm":
+        sched = RPM(**kw)
+    elif name == "vtc":
+        sched = VTC(predictor=predictor, **kw)
+    elif name == "equinox":
         assert predictor is not None, "Equinox requires a predictor"
-        return Equinox(predictor, **kw)
-    raise ValueError(name)
+        if omega_cached is not None and "params" not in kw:
+            kw["params"] = dataclasses.replace(C.HFParams(),
+                                               omega_cached=omega_cached)
+        sched = Equinox(predictor, **kw)
+    else:
+        raise ValueError(name)
+    if omega_cached is not None:
+        sched.omega_cached = omega_cached
+    return sched

@@ -39,6 +39,11 @@ from repro.serving.costmodel import CostModel
 class SimConfig(BatchConfig):
     """BatchCore knobs + the simulator's own stopping horizon."""
     max_time: float = 1e9
+    # shared-prefix radix KV cache (DESIGN.md §9): the simulator keeps a
+    # host-side PagePool + radix tree over prompt token ids so cache-hit
+    # admission decisions and TTFT match the engine's paged backend
+    prefix_cache: bool = False
+    page_size: int = 16
 
 
 @dataclasses.dataclass
@@ -127,8 +132,17 @@ class Simulator:
         self.sched = scheduler
         self.cfg = sim_cfg
         self.observer = observer
+        cache = None
+        if getattr(sim_cfg, "prefix_cache", False):
+            from repro.serving.kv_cache import PagePool
+            from repro.serving.prefix_cache import PrefixCache
+            budget = (sim_cfg.kv_budget_tokens
+                      or cost_model.kv_budget_tokens())
+            self.pool = PagePool(-(-budget // sim_cfg.page_size),
+                                 sim_cfg.page_size)
+            cache = PrefixCache(self.pool)
         self.core = BatchCore(scheduler, cost_model, sim_cfg,
-                              observer=observer)
+                              observer=observer, prefix_cache=cache)
         self.kv_budget = self.core.kv_budget
         self._reset()
 
@@ -190,6 +204,7 @@ class Simulator:
                 r.state = DECODING
                 r.generated = 1              # prefill emits first token
                 r.first_token_time = t
+                self.core.note_prefill_complete(r, t)
                 self.sched.on_token(r, t, 1)
             elif r.state == DECODING:
                 r.generated += 1
@@ -204,6 +219,7 @@ class Simulator:
         util = self.core.iteration_util(t_iter, fresh, len(self.running))
         for r in done_now:
             self.running.remove(r)
+            self.core.release_kv(r)
             self.core.complete(r, t, util=util)
             self.n_finished += 1
 

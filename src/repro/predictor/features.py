@@ -8,16 +8,15 @@ The hash embedding is deterministic (stable across runs / processes).
 """
 from __future__ import annotations
 
-import hashlib
-
 import numpy as np
+
+# the shared trace vocabulary (DESIGN.md §9) supplies the hash, so the
+# radix prefix cache's token ids and these features agree on keywords —
+# bit-identical to the private md5 hash this module used to carry
+from repro.workloads.vocab import stable_hash as _stable_hash
 
 N_HASH = 32
 DIM = 2 + N_HASH + 1
-
-
-def _stable_hash(word: str) -> int:
-    return int.from_bytes(hashlib.md5(word.encode()).digest()[:4], "little")
 
 
 def featurize(keywords, prompt_len: int) -> np.ndarray:

@@ -16,6 +16,13 @@ owns every scheduling decision so simulator and engine cannot drift:
   reservation (``canSchedule``), optionally cap projected iteration time
   (adaptive batching), charge counters via ``scheduler.on_admit``;
 - chunked-prefill budgeting (stall-free scheduling, Sarathi-style);
+- shared-prefix reuse (DESIGN.md §9): when a ``PrefixCache`` is
+  attached, admission looks up the longest cached page-aligned prefix of
+  the prompt, adopts those pages (refcount +1) and starts
+  ``prefill_done`` there, so ``plan_prefill`` only plans chunks for the
+  uncached suffix and ``iteration_time`` prices only uncached tokens
+  (each chunk's ``avg_ctx`` still spans the cached prefix — attention
+  over cached pages is real work and stays charged);
 - iteration timing from the cost model (incl. per-refresh host overhead);
 - completion: release the KV reservation and feed *actual* latency /
   TPS / utilization back to the scheduler and predictor (Algorithm 1
@@ -57,11 +64,12 @@ class BatchCore:
     """
 
     def __init__(self, scheduler: SchedulerBase, cost_model: CostModel,
-                 cfg: BatchConfig = None, observer=None):
+                 cfg: BatchConfig = None, observer=None, prefix_cache=None):
         self.sched = scheduler
         self.cm = cost_model
         self.cfg = cfg or BatchConfig()
         self.observer = observer
+        self.prefix_cache = prefix_cache      # repro.serving.prefix_cache
         self.kv_budget = (self.cfg.kv_budget_tokens
                           or cost_model.kv_budget_tokens())
         self.kv_used = 0
@@ -91,6 +99,11 @@ class BatchCore:
         req = self.sched.pop_next(now)
         if req is None:
             return None
+        # shared-prefix lookup (DESIGN.md §9): page-aligned cached prefix
+        # of the prompt.  Re-probed on every attempt — the tree may have
+        # grown since a failed admission requeued this request.
+        req.cached_prefix = (self.prefix_cache.lookup(req, now)
+                             if self.prefix_cache is not None else 0)
         need = self.reserve_amount(req)
         if self.kv_used + need > self.kv_budget and batch_len > 0:
             # canSchedule failed -> requeue at head, stop admitting
@@ -98,7 +111,8 @@ class BatchCore:
             return None
         if self.cfg.adaptive_batching and batch_len > 0:
             proj = self.cm.prefill_time(
-                min(req.prompt_len, self.cfg.prefill_chunk))
+                min(req.prompt_len - req.cached_prefix,
+                    self.cfg.prefill_chunk))
             if proj > self.cfg.target_iter_time:
                 self._requeue(req, now)
                 return None
@@ -106,7 +120,12 @@ class BatchCore:
         self.reserved[req.rid] = need
         req.state = PREFILLING
         req.admit_time = now
-        req.prefill_done = 0
+        # a cached prefix is prefill work already done: chunks only cover
+        # the uncached suffix (capped so the last prompt token — whose
+        # logits seed the first output token — is always recomputed)
+        req.prefill_done = req.cached_prefix
+        if self.prefix_cache is not None:
+            self.prefix_cache.attach(req, now)
         self.sched.on_admit(req, now)
         if self.observer is not None:
             self.observer.on_admit(req, now)
@@ -147,6 +166,29 @@ class BatchCore:
                                                          "on_prefill_chunk"):
                     self.observer.on_prefill_chunk(r, chunk)
         return plan
+
+    def prefix_match_len(self, tokens) -> int:
+        """Longest cached prefix of ``tokens`` on this replica (tokens; 0
+        without a prefix cache).  Side-effect free — the
+        ``prefix_affinity`` routing probe must not distort LRU order."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.match_len(tokens)
+
+    def note_prefill_complete(self, req: Request, now: float):
+        """A request's prompt finished prefilling (its first token exists):
+        publish the whole-page prompt prefix into the prefix cache so
+        later requests — the next conversation turn, a sibling sharing
+        the system prompt — can reuse it.  Called by both frontends at
+        the same lifecycle point so their trees evolve identically."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(req, now)
+
+    def release_kv(self, req: Request):
+        """Drop the request's page references (refcounted: shared prefix
+        pages survive in the cache; private pages return to the pool)."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.release(req)
 
     # -- timing --------------------------------------------------------------
     def refresh_overhead(self, fresh_batch: bool) -> float:

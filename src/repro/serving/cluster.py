@@ -21,13 +21,18 @@ problem:
   scheduling by fanning out — each replica's argmin pick sees the
   client's full cluster-wide consumption.
 
-- **Routing policies** (pluggable, ``ROUTING_POLICIES``): which replica
-  a request lands on is a load-balancing decision, *not* a fairness
+- **Routing policies** (pluggable, ``ROUTING_POLICIES``; third parties
+  add their own via ``register_routing_policy``): which replica a
+  request lands on is a load-balancing decision, *not* a fairness
   decision — fairness is enforced by the shared counters at every
   replica's admission loop.  Provided: ``round_robin``,
   ``least_kv`` (lowest KV-budget utilisation), ``min_ttft`` (lowest
   predicted time-to-first-token from the replica's clock, queue backlog
-  and roofline prefill cost).
+  and roofline prefill cost), and ``prefix_affinity`` (DESIGN.md §9:
+  route to the replica whose shared-prefix radix cache holds the longest
+  match for this prompt — KV reuse is replica-local, so conversation
+  turns must land where their history's pages live; falls back to
+  ``least_kv`` on a cold prompt).
 
 The cluster event loop is a discrete-event merge: requests are routed
 when the *minimum* replica clock passes their arrival, and the
@@ -100,11 +105,42 @@ def route_min_ttft(cluster: "Cluster", req: Request) -> int:
     return int(min(range(len(cluster.replicas)), key=lambda i: (score(i), i)))
 
 
-ROUTING_POLICIES: Dict[str, Callable[["Cluster", Request], int]] = {
-    "round_robin": route_round_robin,
-    "least_kv": route_least_kv,
-    "min_ttft": route_min_ttft,
-}
+def route_prefix_affinity(cluster: "Cluster", req: Request) -> int:
+    """Longest cached-prefix match wins (DESIGN.md §9): each replica's
+    radix tree is probed side-effect-free (``BatchCore.prefix_match_len``
+    — every replica exposes its core as ``.core``) for the request's
+    prompt tokens; a conversation's turn k+1 therefore follows turn k's
+    pages.  Cold prompts (no tokens, or no replica holds a match) fall
+    back to ``least_kv`` so affinity never degrades load balancing."""
+    toks = req.prompt_tokens
+    if toks is None:
+        return route_least_kv(cluster, req)
+    best_i, best_len = -1, 0
+    for i, rep in enumerate(cluster.replicas):
+        m = rep.core.prefix_match_len(toks)
+        if m > best_len:
+            best_i, best_len = i, m
+    if best_len == 0:
+        return route_least_kv(cluster, req)
+    return best_i
+
+
+ROUTING_POLICIES: Dict[str, Callable[["Cluster", Request], int]] = {}
+
+
+def register_routing_policy(name: str,
+                            fn: Callable[["Cluster", Request], int]):
+    """Add a routing policy under ``name`` so ``Cluster(policy=name)``
+    and ``make_sim_cluster(policy=name)`` resolve it — the same
+    registration path the built-ins use."""
+    ROUTING_POLICIES[name] = fn
+    return fn
+
+
+register_routing_policy("round_robin", route_round_robin)
+register_routing_policy("least_kv", route_least_kv)
+register_routing_policy("min_ttft", route_min_ttft)
+register_routing_policy("prefix_affinity", route_prefix_affinity)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +190,17 @@ class ClusterResult:
 
     def replica_finished(self) -> List[int]:
         return [rep.n_finished for rep in self.replicas]
+
+    def cache_hit_rate(self) -> Optional[float]:
+        """Cluster-wide token-level prefix-cache hit rate (None when no
+        replica runs a prefix cache)."""
+        hit = seen = 0
+        for rep in self.replicas:
+            cache = getattr(getattr(rep, "core", None), "prefix_cache", None)
+            if cache is not None:
+                hit += cache.stats.hit_tokens
+                seen += cache.stats.lookup_tokens
+        return hit / max(seen, 1) if seen else None
 
     def summary(self) -> dict:
         ttfts = self.ttfts()

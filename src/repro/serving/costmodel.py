@@ -150,7 +150,14 @@ class CostModel:
         n/2 for a chunk at offset start — a late chunk of a long prompt
         still pays full-prefix attention).  The endpoints reduce exactly
         to ``prefill_time`` (single whole-prompt chunk, no decode) and
-        ``decode_step_time`` (no chunks)."""
+        ``decode_step_time`` (no chunks).
+
+        Shared-prefix cache hits (DESIGN.md §9) are priced through the
+        same contract: ``BatchCore`` plans chunks only for the uncached
+        suffix — cached tokens never appear in ``n_tokens``, so their
+        weight/MLP FLOPs are skipped — while each chunk's ``avg_ctx``
+        spans the cached prefix, so attention *over* cached pages (the
+        kernel really reads them) stays charged."""
         if not prefill_chunks and not ctx_lens:
             return 0.0                  # idle iteration: no weight stream
         pf_flops = sum(self.flops_per_token * n

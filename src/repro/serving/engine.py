@@ -71,11 +71,17 @@ class ServingEngine:
                  chunked: Optional[bool] = None,
                  prefill_chunk_tokens: int = 512,
                  target_iter_time: float = 0.25,
+                 prefix_cache: bool = False,
+                 keep_first_logits: bool = False,
                  observer=None):
         self.cfg = cfg
         self.sched = scheduler
         self.max_slots = max_slots
         self.max_len = max_len
+        # debug/test probe: retain each request's first-token logits row
+        # (vocab-sized per request — off by default so long runs don't
+        # accumulate dead arrays)
+        self.keep_first_logits = keep_first_logits
         self.cm = cost_model or CostModel(cfg)
         if chunked is None:
             chunked = supports_chunked_prefill(cfg)
@@ -116,6 +122,14 @@ class ServingEngine:
         else:
             self.cache = init_cache(cfg, max_slots, max_len)
             # inactive slots decode garbage into slot 0 tokens — masked out
+        if prefix_cache:
+            # shared-prefix radix KV cache (DESIGN.md §9): only the paged
+            # backend can point several block tables at one physical page,
+            # and only chunked prefill can resume from a cached offset
+            assert backend == "paged" and self.chunked, \
+                "prefix_cache requires the paged backend + chunked prefill"
+            from repro.serving.prefix_cache import PrefixCache
+            self.core.prefix_cache = PrefixCache(self.pool)
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.running: List[Request] = []    # admission order (= sim order)
         self.reserved = self.core.reserved  # alias: core owns KV accounting
@@ -165,6 +179,10 @@ class ServingEngine:
         if req.prompt_tokens is None:
             req.prompt_tokens = np.random.default_rng(req.rid).integers(
                 0, self.cfg.vocab_size, req.prompt_len).astype(np.int32)
+        elif len(req.prompt_tokens) > req.prompt_len:
+            # workload post-capped prompt_len: the cache key and the model
+            # input must agree on the prompt's extent
+            req.prompt_tokens = req.prompt_tokens[:req.prompt_len]
         self.sched.on_arrival(req, self.now())
 
     # -- prefill ------------------------------------------------------------------
@@ -298,6 +316,8 @@ class ServingEngine:
                 req.prompt_len + req._vlm_prefix)
         req._pcache = None
         req._next_token = int(jnp.argmax(row))
+        if self.keep_first_logits:
+            req._first_row = np.asarray(row, np.float32)
         req._pos = req.prompt_len + req._vlm_prefix
 
     # -- decode -------------------------------------------------------------------
@@ -408,6 +428,7 @@ class ServingEngine:
             req.state = DECODING
             req.generated = 1              # prefill emits first token
             req.first_token_time = now
+            self.core.note_prefill_complete(req, now)
             self.sched.on_token(req, now, 1)
             if req.generated >= req.output_len:
                 done_now.append(req)

@@ -5,35 +5,76 @@ vLLM-style indirection adapted to TPU tiles (DESIGN.md §3): the pools are
 lists of page ids; block tables are dense int32 matrices handed to the
 Pallas paged-attention kernel (0-padded — padding pages are masked by
 ``ctx_lens`` inside the kernel).
+
+Pages are **refcounted** so the shared-prefix radix cache (DESIGN.md §9,
+``repro.serving.prefix_cache``) can point several requests' block tables
+at the same physical pages: ``alloc`` starts a page at refcount 1,
+``adopt`` lets another request share it, and ``free_request`` decrements
+instead of freeing.  A page whose refcount reaches 0 returns to the free
+list unless the prefix cache holds it (``mark_cached``), in which case it
+stays resident — warm but reclaimable — until LRU eviction under pool
+pressure (the ``reclaimer`` hook) releases it.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional, Sequence, Set
 
 import jax.numpy as jnp
 import numpy as np
 
 
 class PagePool:
-    """Free-list allocator over a fixed number of pages."""
+    """Free-list allocator over a fixed number of refcounted pages."""
 
     def __init__(self, n_pages: int, page_size: int):
         self.n_pages = n_pages
         self.page_size = page_size
         self.free: List[int] = list(range(n_pages - 1, -1, -1))
         self.owned: Dict[int, List[int]] = {}
+        self.refcount: Dict[int, int] = {}      # live pages only
+        self.cached: Set[int] = set()           # pinned by the prefix cache
+        # prefix-cache eviction hook: called with the number of pages still
+        # missing; must return how many it actually released to the free
+        # list (0 when nothing is evictable)
+        self.reclaimer: Optional[Callable[[int], int]] = None
 
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def evictable_pages(self) -> int:
+        """Cached pages no live request references (LRU-reclaimable)."""
+        return sum(1 for p in self.cached if self.refcount.get(p, 0) == 0)
+
     def can_alloc(self, n_tokens: int) -> bool:
-        return len(self.free) >= self.pages_needed(n_tokens)
+        return (len(self.free) + self.evictable_pages()
+                >= self.pages_needed(n_tokens))
+
+    def _reclaim(self, need: int):
+        """Ask the prefix cache (if any) to evict LRU refcount-0 pages."""
+        if need > len(self.free) and self.reclaimer is not None:
+            self.reclaimer(need - len(self.free))
 
     def alloc(self, rid: int, n_tokens: int) -> List[int]:
         need = self.pages_needed(n_tokens)
+        self._reclaim(need)
         if need > len(self.free):
             raise MemoryError(f"KV pool exhausted ({need} > {len(self.free)})")
         pages = [self.free.pop() for _ in range(need)]
+        for p in pages:
+            self.refcount[p] = 1
+        self.owned.setdefault(rid, []).extend(pages)
+        return pages
+
+    def adopt(self, rid: int, pages: Sequence[int]) -> List[int]:
+        """Share already-resident pages (a cached prefix) with ``rid``:
+        increment each page's refcount and prepend-append them to the
+        request's page list.  Must be called before any ``alloc`` for
+        ``rid`` so the block table stays position-ordered."""
+        pages = list(pages)
+        for p in pages:
+            if p not in self.refcount:
+                raise ValueError(f"page {p} is not live; cannot adopt")
+            self.refcount[p] += 1
         self.owned.setdefault(rid, []).extend(pages)
         return pages
 
@@ -54,18 +95,51 @@ class PagePool:
         return self.owned.setdefault(rid, [])
 
     def free_request(self, rid: int):
-        self.free.extend(reversed(self.owned.pop(rid, [])))
+        """Drop ``rid``'s references.  Unknown rid (never allocated, or
+        already freed) raises — a silent double-free would corrupt the
+        refcounts that prefix sharing depends on."""
+        if rid not in self.owned:
+            raise ValueError(f"free_request({rid}): unknown rid "
+                             "(double free?)")
+        for p in reversed(self.owned.pop(rid)):
+            self.refcount[p] -= 1
+            if self.refcount[p] < 0:
+                raise AssertionError(f"page {p}: negative refcount")
+            if self.refcount[p] == 0 and p not in self.cached:
+                del self.refcount[p]
+                self.free.append(p)
+
+    # -- prefix-cache pinning -------------------------------------------------
+    def mark_cached(self, pages: Sequence[int]):
+        """Pin pages: refcount 0 no longer returns them to the free list."""
+        for p in pages:
+            if p not in self.refcount:
+                raise ValueError(f"page {p} is not live; cannot cache")
+            self.cached.add(p)
+
+    def release_cached(self, pages: Sequence[int]) -> int:
+        """Unpin pages (prefix-cache eviction); refcount-0 pages return to
+        the free list.  Returns how many pages were actually freed."""
+        freed = 0
+        for p in pages:
+            self.cached.discard(p)
+            if self.refcount.get(p, 0) == 0:
+                self.refcount.pop(p, None)
+                self.free.append(p)
+                freed += 1
+        return freed
 
     @property
     def used_pages(self) -> int:
         return self.n_pages - len(self.free)
 
     def block_table(self, rids: List[int], width: int) -> np.ndarray:
-        """Dense (len(rids), width) int32 table, 0-padded."""
+        """Dense (len(rids), width) int32 table, 0-padded (and truncated to
+        ``width`` when a request owns more pages than the table is wide)."""
         bt = np.zeros((len(rids), width), np.int32)
         for i, rid in enumerate(rids):
-            pages = self.owned.get(rid, [])
-            bt[i, :len(pages)] = pages[:width]
+            pages = self.owned.get(rid, [])[:width]
+            bt[i, :len(pages)] = pages
         return bt
 
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.request import Request
+from repro.workloads.vocab import filler_tokens, prompt_token_ids
 
 # intent -> (base output length, prompt-length exponent, noise sigma)
 INTENTS = {
@@ -81,6 +82,61 @@ def lmsys_like(n_clients=27, duration=120.0, total_rate=8.0, seed=0):
                 keywords=kw))
             rid += 1
             t += rng.exponential(1.0 / rate)
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def multiturn_sharegpt_like(n_clients=8, n_conversations=3,
+                            turns=(2, 7), system_pool=4, system_len=64,
+                            turn_len=(8, 160), think_time=6.0,
+                            max_prompt=3500, seed=0):
+    """Multi-turn conversations with real token ids — the workload the
+    shared-prefix radix KV cache (DESIGN.md §9) is built for.
+
+    Per client: ``n_conversations`` sequential conversations, each opening
+    with a system prompt drawn from a pool of ``system_pool`` prompts
+    *shared across all clients* (deterministic token ids, so distinct
+    clients' requests share page-aligned prefixes).  Turn *k*'s prompt is
+    the concatenated history — system prompt, every earlier user turn and
+    assistant reply, then the new user turn — so each turn's
+    ``prompt_tokens`` strictly extends the previous turn's.  Assistant
+    replies are seeded filler ids standing in for generated text; output
+    lengths and per-turn keywords reuse the LMSYS-style intent model, so
+    predictor structure is preserved.  Arrivals: turn k+1 follows turn k
+    after an exponential think time (mean ``think_time`` seconds).
+    """
+    rng = np.random.default_rng(seed)
+    # the system-prompt pool is keyed by index only — identical across
+    # clients and runs, which is what makes cross-client sharing real
+    sys_prompts = [prompt_token_ids(("system", f"sys{i}"), system_len,
+                                    seed=10_000 + i)
+                   for i in range(system_pool)]
+    reqs, rid = [], 0
+    for ci in range(n_clients):
+        t = float(rng.exponential(think_time))
+        for _conv in range(n_conversations):
+            history = [sys_prompts[int(rng.integers(system_pool))]]
+            hist_len = len(history[0])
+            n_turns = int(rng.integers(turns[0], turns[1]))
+            for _turn in range(n_turns):
+                kw, plen, intent = sample_prompt(rng)
+                user_len = int(np.clip(plen, turn_len[0], turn_len[1]))
+                user = prompt_token_ids(kw, user_len,
+                                        seed=int(rng.integers(1 << 31)))
+                if hist_len + user_len > max_prompt:
+                    break
+                prompt = np.concatenate(history + [user])
+                out_len = true_output_len(intent, len(prompt), rng)
+                reqs.append(Request(
+                    rid=rid, client=f"client{ci}", arrival=float(t),
+                    prompt_len=len(prompt), output_len=out_len,
+                    keywords=kw, prompt_tokens=prompt))
+                rid += 1
+                reply = filler_tokens(out_len,
+                                      seed=int(rng.integers(1 << 31)))
+                history += [user, reply]
+                hist_len += user_len + out_len
+                t += float(rng.exponential(think_time))
+            t += float(rng.exponential(2.0 * think_time))   # between convs
     return sorted(reqs, key=lambda r: r.arrival)
 
 

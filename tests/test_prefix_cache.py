@@ -1,0 +1,507 @@
+"""Shared-prefix radix KV cache (DESIGN.md §9): radix tree semantics,
+refcounted page sharing, exact-logits reuse on the paged backend,
+sim/engine parity with the cache enabled, and prefix-affinity routing."""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import SMOKE_FACTORIES, get_config
+from repro.core import Request, SimConfig, Simulator, make_scheduler
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.serving.kv_cache import PagePool
+from repro.serving.prefix_cache import PrefixCache
+from repro.workloads import multiturn_sharegpt_like
+from repro.workloads.vocab import prompt_token_ids
+
+PS = 4   # small pages keep the unit tests readable
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def mk_cache(n_pages=64, page_size=PS):
+    pool = PagePool(n_pages, page_size)
+    return pool, PrefixCache(pool)
+
+
+def mk_req(rid, tokens, output_len=4, client="c", arrival=0.0):
+    tokens = np.asarray(tokens, np.int32)
+    return Request(rid=rid, client=client, arrival=arrival,
+                   prompt_len=len(tokens), output_len=output_len,
+                   keywords=("chat",), prompt_tokens=tokens)
+
+
+def publish(cache, req, now=0.0):
+    """Admission + prefill-complete in one step (unit-test shorthand)."""
+    req.cached_prefix = cache.lookup(req, now)
+    cache.attach(req, now)
+    cache.insert(req, now)
+
+
+# -- radix tree semantics ------------------------------------------------------
+def test_match_is_page_aligned_and_capped():
+    _, cache = mk_cache()
+    toks = list(range(100, 110))                     # 10 tokens, 2 full pages
+    publish(cache, mk_req(0, toks))
+    # identical prompt: match is capped below prompt_len so the last
+    # token is always recomputed -> only page 0 of the 2 cached pages
+    r = mk_req(1, toks[:8])
+    assert cache.lookup(r, 1.0) == PS
+    # a longer prompt sharing the prefix gets both full pages
+    r2 = mk_req(2, toks + [1, 2, 3])
+    assert cache.lookup(r2, 1.0) == 2 * PS
+
+
+def test_match_stops_at_divergence_inside_page():
+    _, cache = mk_cache()
+    publish(cache, mk_req(0, [1, 2, 3, 4, 5, 6, 7, 8, 9]))
+    # diverges at token 6 (inside page 1): only page 0 matches
+    r = mk_req(1, [1, 2, 3, 4, 5, 99, 7, 8, 9])
+    assert cache.lookup(r, 1.0) == PS
+    # diverges at token 0: nothing matches
+    r2 = mk_req(2, [99, 2, 3, 4, 5, 6, 7, 8, 9])
+    assert cache.lookup(r2, 1.0) == 0
+
+
+def test_insert_splits_edge_at_page_boundary():
+    _, cache = mk_cache()
+    a = list(range(1, 13))                           # 3 full pages
+    publish(cache, mk_req(0, a))
+    b = a[:8] + [50, 51, 52, 53, 54]                 # shares 2 pages, forks
+    rb = mk_req(1, b)
+    publish(cache, rb, now=1.0)
+    assert rb.cached_prefix == 2 * PS
+    # both suffixes stay matchable after the split
+    assert cache.match_len(np.asarray(a, np.int32)) == 3 * PS
+    assert cache.match_len(np.asarray(b, np.int32)) == 3 * PS
+
+
+def test_partial_trailing_page_never_shared():
+    _, cache = mk_cache()
+    publish(cache, mk_req(0, list(range(1, 11))))    # 10 toks: 2 pages + 2
+    # same 10 tokens then diverging tail: the trailing partial page of
+    # rid 0 was never inserted, so only the 2 full pages match
+    r = mk_req(1, list(range(1, 11)) + [99] * 6)
+    assert cache.lookup(r, 1.0) == 2 * PS
+
+
+def test_refcount_sharing_and_release():
+    pool, cache = mk_cache(n_pages=8)
+    a = mk_req(0, list(range(1, 9)))                 # 2 full pages
+    publish(cache, a)
+    pages_a = list(pool.owned[0])
+    b = mk_req(1, list(range(1, 9)) + [70, 71, 72, 73])
+    b.cached_prefix = cache.lookup(b, 1.0)
+    cache.attach(b, 1.0)
+    assert b.cached_prefix == 2 * PS
+    assert pool.owned[1][:2] == pages_a[:2]          # physically shared
+    assert pool.refcount[pages_a[0]] == 2            # a + b
+    cache.release(a)
+    assert pool.refcount[pages_a[0]] == 1            # b still holds it
+    cache.release(b)
+    assert pool.refcount[pages_a[0]] == 0            # warm in the tree
+    assert pages_a[0] not in pool.free               # ... not on the free list
+
+
+def test_eviction_lru_and_refcount_protection():
+    pool, cache = mk_cache(n_pages=8)                # tight pool
+    a = mk_req(0, list(range(1, 9)))                 # 2 pages
+    publish(cache, a, now=0.0)
+    b = mk_req(1, list(range(20, 28)))               # 2 pages, younger
+    publish(cache, b, now=1.0)
+    cache.release(b)                                 # b's pages evictable
+    pool.alloc(2, 4 * PS)          # consumes the free list — no eviction yet
+    assert cache.match_len(np.asarray(list(range(20, 28)), np.int32)) == 2 * PS
+    # pool pressure: the next alloc must evict b's LRU refcount-0 pages,
+    # never a's (still referenced by a live request)
+    pool.alloc(3, PS)
+    assert cache.match_len(np.asarray(list(range(1, 9)), np.int32)) == 2 * PS
+    assert cache.match_len(np.asarray(list(range(20, 28)), np.int32)) == 0
+    # with a still referenced, the rest of the pool is unreclaimable
+    with pytest.raises(MemoryError):
+        pool.alloc(4, 3 * PS)
+    cache.release(a)
+    pool.alloc(4, 2 * PS)                            # now a's pages evict
+    assert cache.match_len(np.asarray(list(range(1, 9)), np.int32)) == 0
+
+
+def test_partially_adopted_leaf_evicts_its_free_tail():
+    """Regression: ``can_alloc`` counts every cached refcount-0 page, so
+    eviction must reclaim the refcount-0 *tail* of a leaf whose head
+    pages are still adopted by a live request — whole-leaf-only eviction
+    would strand them and turn can_alloc=True into a MemoryError."""
+    pool, cache = mk_cache(n_pages=2)
+    a = mk_req(0, list(range(1, 9)))                 # exactly 2 pages
+    publish(cache, a)
+    cache.release(a)
+    b = mk_req(1, list(range(1, 9)))                 # identical prompt
+    b.cached_prefix = cache.lookup(b, 1.0)           # cap -> adopts page 0
+    cache.attach(b, 1.0)
+    assert b.cached_prefix == PS
+    assert pool.can_alloc(PS)                        # page 1 is reclaimable
+    pages = pool.alloc(2, PS)                        # must evict page 1
+    assert len(pages) == 1
+    # the shared head survived: b's adopted page is intact and matchable
+    assert cache.match_len(np.asarray(list(range(1, 9)), np.int32)) == PS
+    assert pool.refcount[pool.owned[1][0]] == 1
+
+
+def test_match_len_probe_is_side_effect_free():
+    _, cache = mk_cache()
+    toks = list(range(1, 9))
+    publish(cache, mk_req(0, toks, output_len=2), now=5.0)
+    node = next(iter(cache.root.children.values()))
+    stamp = node.last_access
+    assert cache.match_len(np.asarray(toks, np.int32)) == 2 * PS
+    assert node.last_access == stamp                 # probe didn't touch LRU
+
+
+# -- property tests ------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 7), min_size=1, max_size=40),
+       st.lists(st.integers(1, 7), min_size=1, max_size=40))
+def test_radix_match_bounded_by_common_prefix(xs, ys):
+    """For any two sequences: insert xs, match ys — the match is
+    page-aligned and never exceeds the true common prefix."""
+    _, cache = mk_cache(n_pages=32)
+    publish(cache, mk_req(0, xs))
+    m = cache.match_len(np.asarray(ys, np.int32))
+    common = 0
+    for a, b in zip(xs, ys):
+        if a != b:
+            break
+        common += 1
+    assert m % PS == 0
+    assert m <= common
+    # completeness: whole-page common prefixes ARE found (minus the
+    # trailing partial page of xs, which is never published)
+    assert m >= min(common // PS, len(xs) // PS) * PS
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.lists(st.integers(1, 5), min_size=4,
+                                   max_size=24),
+                          st.booleans()),
+                min_size=1, max_size=10))
+def test_eviction_never_reclaims_referenced_pages(ops):
+    """Interleaved publish/release + forced eviction: a page with
+    refcount > 0 must never reach the free list."""
+    pool, cache = mk_cache(n_pages=16)
+    live = {}
+    for rid, (toks, do_release) in enumerate(ops):
+        req = mk_req(rid, toks)
+        try:
+            publish(cache, req)
+        except MemoryError:
+            continue
+        live[rid] = req
+        if do_release and live:
+            victim_rid = next(iter(live))
+            cache.release(live.pop(victim_rid))
+        cache.evict(2)                               # constant pressure
+        held = {p for r in live.values()
+                for p in pool.owned.get(r.rid, [])}
+        assert held.isdisjoint(pool.free)
+        for p in held:
+            assert pool.refcount[p] >= 1
+
+
+# -- PagePool hardening (satellite) -------------------------------------------
+def test_double_free_raises():
+    pool = PagePool(8, PS)
+    pool.alloc(0, 8)
+    pool.free_request(0)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free_request(0)
+    with pytest.raises(ValueError):
+        pool.free_request(42)                        # never allocated
+
+
+def test_adopt_requires_live_page():
+    pool = PagePool(8, PS)
+    with pytest.raises(ValueError):
+        pool.adopt(1, [3])                           # page 3 was never alloc'd
+
+
+def test_exhaustion_with_and_without_reclaimer():
+    pool = PagePool(4, PS)
+    pool.alloc(0, 4 * PS)
+    assert not pool.can_alloc(1)
+    with pytest.raises(MemoryError):
+        pool.alloc(1, PS)
+    # a reclaimer that cannot free anything must not mask the error
+    pool.reclaimer = lambda n: 0
+    with pytest.raises(MemoryError):
+        pool.alloc(1, PS)
+
+
+def test_can_alloc_counts_evictable_cached_pages():
+    pool, cache = mk_cache(n_pages=4)
+    req = mk_req(0, list(range(1, 1 + 4 * PS)))      # fills the pool
+    publish(cache, req)
+    cache.release(req)
+    assert len(pool.free) == 0
+    assert pool.can_alloc(2 * PS)                    # evictable counts
+    pool.alloc(1, 2 * PS)                            # triggers eviction
+
+
+def test_block_table_truncates_and_pads():
+    pool = PagePool(8, PS)
+    pool.alloc(5, 3 * PS)                            # 3 pages
+    bt = pool.block_table([5], width=6)
+    assert bt.shape == (1, 6) and (bt[0, 3:] == 0).all()
+    narrow = pool.block_table([5], width=2)          # narrower than owned
+    assert narrow.shape == (1, 2)
+    assert list(narrow[0]) == pool.owned[5][:2]
+
+
+def test_used_pages_consistent_after_interleaved_alloc_free():
+    pool = PagePool(16, PS)
+    pool.alloc(0, 3 * PS)
+    pool.alloc(1, 2 * PS)
+    pool.free_request(0)
+    pool.alloc(2, 5 * PS)
+    pool.extend(2, 5 * PS, 6 * PS)
+    pool.free_request(1)
+    assert pool.used_pages == 6                      # rid 2's pages only
+    owned = [p for pages in pool.owned.values() for p in pages]
+    assert len(set(owned)) == len(owned)
+    assert set(owned).isdisjoint(pool.free)
+    pool.free_request(2)
+    assert pool.used_pages == 0
+
+
+# -- engine: exact-logits reuse (the tentpole invariant) ----------------------
+@pytest.fixture(scope="module")
+def warm_cold_logits():
+    import jax
+
+    from repro.models import init_params
+    from repro.serving.engine import ServingEngine
+
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    params = init_params(jax.random.key(7), cfg)
+    sys_toks = prompt_token_ids(("system", "sys0"), 32, seed=10_000)
+
+    def mk(rid, seed, plen, arrival):
+        toks = np.concatenate([
+            sys_toks, prompt_token_ids(("chat",), plen - 32, seed=seed)])
+        return mk_req(rid, toks, output_len=4, arrival=arrival)
+
+    reqs = [mk(0, 1, 48, 0.0), mk(1, 2, 56, 0.5), mk(2, 3, 48, 1.0)]
+    out = {}
+    for cache in (False, True):
+        eng = ServingEngine(cfg, make_scheduler("fcfs"), params=params,
+                            max_slots=4, max_len=96, backend="paged",
+                            chunked=True, prefill_chunk_tokens=16,
+                            prefix_cache=cache, keep_first_logits=True)
+        done = eng.run([dataclasses.replace(r) for r in reqs])
+        out[cache] = {r.rid: r for r in done}
+        if cache:
+            out["stats"] = eng.core.prefix_cache.stats
+    return out
+
+
+def test_cached_prefill_logits_exactly_equal_cold(warm_cold_logits):
+    """Prefill resuming from shared cached pages must produce logits
+    EXACTLY equal to a cold full prefill — page sharing changes where KV
+    lives, never a single bit of what attention computes."""
+    warm = warm_cold_logits[True]
+    assert warm[1].cached_prefix == 32 and warm[2].cached_prefix == 32
+    for rid in (0, 1, 2):
+        cold_row = warm_cold_logits[False][rid]._first_row
+        np.testing.assert_array_equal(warm[rid]._first_row, cold_row)
+
+
+def test_warm_engine_reports_hits(warm_cold_logits):
+    s = warm_cold_logits["stats"]
+    assert s.hits == 2 and s.hit_tokens == 64
+    assert 0 < s.hit_rate() < 1
+
+
+# -- sim/engine parity with the cache enabled (PR-2 invariant) ----------------
+def test_parity_admissions_chunks_ttft_with_cache(cm):
+    """The stall-free parity invariant must survive the prefix cache:
+    same trace + same scheduler + caches on both frontends => identical
+    admission order, identical chunk plans, identical cached-prefix
+    decisions and identical TTFT/e2e latencies."""
+    from repro.serving.engine import ServingEngine
+
+    class Spy:
+        def __init__(self):
+            self.order, self.chunks = [], []
+
+        def on_admit(self, r, now):
+            self.order.append(r.rid)
+
+        def on_prefill_chunk(self, r, c):
+            self.chunks.append((r.rid, c))
+
+        def on_complete(self, *a, **k):
+            pass
+
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    sys_toks = prompt_token_ids(("system", "sys0"), 32, seed=10_000)
+    rng = np.random.default_rng(0)
+
+    def trace():
+        reqs = []
+        for i in range(10):
+            plen = int(rng.integers(40, 60))
+            toks = np.concatenate([
+                sys_toks,
+                prompt_token_ids(("chat",), plen - 32, seed=i)])
+            reqs.append(Request(
+                rid=i, client=f"client{i % 2}", arrival=0.2 * i,
+                prompt_len=plen, output_len=int(rng.integers(4, 10)),
+                keywords=("chat",), prompt_tokens=toks))
+        return reqs
+
+    reqs = trace()
+    espy = Spy()
+    eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=4,
+                        max_len=96, kv_budget_tokens=2000, cost_model=cm,
+                        chunked=True, prefill_chunk_tokens=16,
+                        backend="paged", prefix_cache=True, observer=espy)
+    done = eng.run([dataclasses.replace(r) for r in reqs])
+    assert len(done) == 10
+
+    sspy = Spy()
+    sim = Simulator(cm, make_scheduler("fcfs"),
+                    SimConfig(max_batch=4, kv_budget_tokens=2000,
+                              default_reserve=128, prefill_chunk=16,
+                              prefix_cache=True, page_size=16),
+                    observer=sspy)
+    res = sim.run([dataclasses.replace(r) for r in reqs])
+    assert all(r.state == "finished" for r in res.requests)
+
+    assert espy.order == sspy.order
+    assert espy.chunks == sspy.chunks
+    e = {r.rid: r for r in done}
+    s = {r.rid: r for r in res.requests}
+    for rid in e:
+        assert e[rid].cached_prefix == s[rid].cached_prefix
+        assert e[rid].ttft() == pytest.approx(s[rid].ttft(), abs=1e-9)
+        assert e[rid].e2e_latency() == pytest.approx(
+            s[rid].e2e_latency(), abs=1e-9)
+    # the shared system prompt actually produced hits on both sides
+    assert sum(r.cached_prefix for r in done) > 0
+
+
+# -- fairness-counter discount (satellite) ------------------------------------
+def test_omega_cached_discounts_service_charge():
+    from repro.core import counters as C
+
+    full = C.ufc_increment(100, 10, 0.0, 0.0)
+    half = C.ufc_increment(100, 10, 0.0, 0.0, t_in_cached=80,
+                           omega_cached=0.5)
+    free = C.ufc_increment(100, 10, 0.0, 0.0, t_in_cached=80,
+                           omega_cached=0.0)
+    assert half == full - 40.0
+    assert free == full - 80.0
+    # omega_cached=1 reproduces the paper exactly
+    assert C.ufc_increment(100, 10, 0.0, 0.0, t_in_cached=80,
+                           omega_cached=1.0) == full
+
+
+def test_scheduler_bills_cached_tokens_at_discount():
+    sched = make_scheduler("vtc", omega_cached=0.25)
+    req = mk_req(0, list(range(64)), output_len=1)
+    req.cached_prefix = 32
+    sched.on_arrival(req, 0.0)
+    sched.pop_next(0.0)
+    sched.on_admit(req, 0.0)
+    # 32 uncached + 0.25 * 32 cached = 40
+    assert sched.counter["c"] == pytest.approx(40.0)
+    assert sched.service["c"] == pytest.approx(40.0)
+    # default stays cache-blind
+    blind = make_scheduler("vtc")
+    req2 = mk_req(1, list(range(64)), output_len=1)
+    req2.cached_prefix = 32
+    blind.on_arrival(req2, 0.0)
+    blind.pop_next(0.0)
+    blind.on_admit(req2, 0.0)
+    assert blind.counter["c"] == pytest.approx(64.0)
+
+
+# -- cluster: prefix-affinity routing (satellite) ------------------------------
+def test_unknown_policy_raises_valueerror_naming_policies(cm):
+    from repro.serving.cluster import make_sim_cluster
+
+    with pytest.raises(ValueError, match="round_robin"):
+        make_sim_cluster(2, cm, policy="nope",
+                         sim_cfg=SimConfig(kv_budget_tokens=4000))
+
+
+def test_register_routing_policy_roundtrip(cm):
+    from repro.serving.cluster import (ROUTING_POLICIES, make_sim_cluster,
+                                       register_routing_policy,
+                                       route_round_robin)
+
+    assert "prefix_affinity" in ROUTING_POLICIES   # registered like built-ins
+    register_routing_policy("always_zero", lambda cl, r: 0)
+    try:
+        cl = make_sim_cluster(2, cm, policy="always_zero",
+                              sim_cfg=SimConfig(kv_budget_tokens=4000))
+        reqs = [mk_req(i, list(range(8)), arrival=0.1 * i, client="a")
+                for i in range(4)]
+        cl.run(reqs, max_time=60.0)
+        assert set(cl.routed_to.values()) == {0}
+    finally:
+        del ROUTING_POLICIES["always_zero"]
+
+
+def test_prefix_affinity_beats_round_robin_hit_rate(cm):
+    """4 sim replicas with per-replica radix caches: affinity keeps a
+    conversation's turns on one replica (hit rate survives); round_robin
+    scatters them (hit rate collapses).  ISSUE acceptance criterion."""
+    from repro.serving.cluster import make_sim_cluster
+
+    trace = multiturn_sharegpt_like(n_clients=6, n_conversations=2, seed=3)
+    hits = {}
+    for policy in ("round_robin", "prefix_affinity"):
+        cl = make_sim_cluster(
+            4, cm, scheduler="vtc", policy=policy,
+            sim_cfg=SimConfig(max_batch=16, kv_budget_tokens=60_000,
+                              prefix_cache=True))
+        res = cl.run([dataclasses.replace(r) for r in trace],
+                     max_time=1e9)
+        assert res.summary()["finished"] == len(trace)
+        hits[policy] = res.cache_hit_rate()
+    assert hits["prefix_affinity"] > hits["round_robin"]
+    assert hits["prefix_affinity"] > 0.3
+
+
+def test_prefix_affinity_cold_prompt_falls_back_to_least_kv(cm):
+    from repro.serving.cluster import make_sim_cluster
+
+    cl = make_sim_cluster(3, cm, scheduler="vtc", policy="prefix_affinity",
+                          sim_cfg=SimConfig(max_batch=8,
+                                            kv_budget_tokens=8000,
+                                            prefix_cache=True))
+    # no prompt_tokens at all: must not crash, must still balance
+    reqs = [Request(rid=i, client=f"c{i % 3}", arrival=0.05 * i,
+                    prompt_len=40, output_len=4, keywords=("chat",))
+            for i in range(9)]
+    res = cl.run(reqs, max_time=1e9)
+    assert res.summary()["finished"] == 9
+
+
+# -- simulator end-to-end (cache-aware TTFT) ----------------------------------
+def test_sim_cache_cuts_ttft_at_equal_throughput(cm):
+    trace = multiturn_sharegpt_like(n_clients=4, n_conversations=2, seed=0)
+    stats = {}
+    for cache in (False, True):
+        sim = Simulator(cm, make_scheduler("vtc"),
+                        SimConfig(max_batch=16, kv_budget_tokens=60_000,
+                                  prefix_cache=cache))
+        res = sim.run([dataclasses.replace(r) for r in trace])
+        assert all(r.state == "finished" for r in res.requests)
+        stats[cache] = (float(np.percentile(res.ttfts(), 50)),
+                        res.throughput_tokens_per_s())
+    assert stats[True][0] < 0.8 * stats[False][0]     # >= 20% p50 TTFT cut
+    assert stats[True][1] >= 0.999 * stats[False][1]  # no throughput loss

@@ -1,8 +1,10 @@
 """Workload generators: paper scenario parameters + trace statistics."""
 import numpy as np
 
-from repro.workloads import (balanced, corpus, dynamic, lmsys_like,
-                             overload, sharegpt_like, stochastic)
+from repro.workloads import (TRACE_VOCAB, balanced, corpus, dynamic,
+                             lmsys_like, multiturn_sharegpt_like, overload,
+                             prompt_token_ids, sharegpt_like, stochastic,
+                             token_id)
 
 
 def test_balanced_parameters():
@@ -70,3 +72,61 @@ def test_sharegpt_like_counts():
     for r in reqs:
         per[r.client] += 1
     assert all(v == 50 for v in per.values())
+
+
+# -- shared trace vocabulary (DESIGN.md §9) -----------------------------------
+def test_vocab_deterministic_and_bounded():
+    assert token_id("chat") == token_id("chat")
+    toks = prompt_token_ids(("chat", "the"), 50, seed=3)
+    toks2 = prompt_token_ids(("chat", "the"), 50, seed=3)
+    np.testing.assert_array_equal(toks, toks2)
+    assert toks.dtype == np.int32 and len(toks) == 50
+    assert (toks >= 0).all() and (toks < TRACE_VOCAB).all()
+    # different filler seed diverges after the keyword prefix
+    toks3 = prompt_token_ids(("chat", "the"), 50, seed=4)
+    assert toks[0] == toks3[0] and not (toks == toks3).all()
+
+
+def test_features_share_vocab_hash():
+    """The predictor's hashed-keyword features and the trace vocabulary
+    must agree on the keyword hash (one vocabulary, satellite fix)."""
+    from repro.predictor.features import featurize
+    from repro.workloads.vocab import stable_hash
+
+    f = featurize(("chat",), 10)
+    assert f[2 + stable_hash("chat") % 32] == 1.0
+
+
+# -- multi-turn conversations (DESIGN.md §9) ----------------------------------
+def test_multiturn_prompts_extend_previous_turn():
+    """Turn k's prompt_tokens must be a strict prefix of turn k+1's —
+    the structure the radix prefix cache exploits."""
+    reqs = multiturn_sharegpt_like(n_clients=3, n_conversations=2, seed=0)
+    assert all(r.prompt_tokens is not None
+               and len(r.prompt_tokens) == r.prompt_len for r in reqs)
+    by_client = {}
+    for r in sorted(reqs, key=lambda r: r.rid):
+        by_client.setdefault(r.client, []).append(r)
+    extending_pairs = 0
+    for turns in by_client.values():
+        for a, b in zip(turns, turns[1:]):
+            if b.prompt_len > a.prompt_len and np.array_equal(
+                    b.prompt_tokens[:a.prompt_len], a.prompt_tokens):
+                extending_pairs += 1
+    assert extending_pairs > len(by_client)       # most turns extend history
+
+
+def test_multiturn_system_prompts_shared_across_clients():
+    reqs = multiturn_sharegpt_like(n_clients=8, n_conversations=2,
+                                   system_pool=2, system_len=32, seed=1)
+    firsts = {tuple(r.prompt_tokens[:32]) for r in reqs}
+    # only system_pool distinct 32-token openings across ALL clients
+    assert len(firsts) == 2
+
+
+def test_multiturn_arrivals_ordered_and_output_structure():
+    reqs = multiturn_sharegpt_like(n_clients=4, n_conversations=2, seed=2)
+    arr = np.array([r.arrival for r in reqs])
+    assert (np.diff(arr) >= 0).all()
+    assert all(r.output_len >= 1 for r in reqs)
+    assert all(r.keywords for r in reqs)          # predictor features intact
