@@ -1,9 +1,11 @@
 """Shared benchmark plumbing: one simulator run per (scheduler, workload),
-memoised predictors, CSV row helpers."""
+memoised predictors, CSV row helpers, machine-readable result files."""
 from __future__ import annotations
 
 import copy
 import functools
+import json
+import os
 import time
 
 from repro.configs import get_config
@@ -49,6 +51,38 @@ def run_sim(sched_name: str, wl, *, pred_kind=None, simcfg=None,
 
 def row(name: str, wall_s: float, derived: str) -> str:
     return f"{name},{wall_s * 1e6:.0f},{derived}"
+
+
+def write_bench_json(name: str, rows, extra: dict = None) -> str:
+    """Machine-readable benchmark result: ``BENCH_<name>.json`` holding
+    the CSV rows (the human-facing output, parsed into name/us/derived
+    fields) plus any structured metrics the caller passes.  CI uploads
+    these as artifacts so the perf trajectory is queryable across
+    commits; ``BENCH_OUT`` overrides the output directory."""
+    parsed = []
+    for line in rows:
+        if line.startswith("#"):
+            continue
+        parts = line.split(",", 2)
+        entry = {"name": parts[0]}
+        if len(parts) > 1:
+            try:
+                entry["us_per_call"] = float(parts[1])
+            except ValueError:
+                entry["us_per_call"] = parts[1]
+        if len(parts) > 2:
+            entry["derived"] = parts[2]
+        parsed.append(entry)
+    payload = {"bench": name, "rows": parsed, "raw": list(rows),
+               "unix_time": time.time()}
+    if extra:
+        payload.update(extra)
+    out_dir = os.environ.get("BENCH_OUT", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
 
 
 def fmt_summary(res, obs, clients=("client1", "client2")) -> dict:

@@ -126,6 +126,11 @@ def run(quick: bool = False):
 def main():
     import argparse
 
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import write_bench_json
+    except ImportError:                    # python benchmarks/...py
+        from common import write_bench_json
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small trace for CI (<1 min)")
@@ -133,6 +138,7 @@ def main():
     lines = run(quick=args.smoke)
     for line in lines:
         print(line, flush=True)
+    write_bench_json("prefix_cache", lines, {"smoke": args.smoke})
     ok = lines[-1].rsplit("ok=", 1)[-1] == "True"
     if not ok:
         raise SystemExit(

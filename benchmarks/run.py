@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows, and writes each module's
+results to a machine-readable ``BENCH_<name>.json`` (uploaded as a CI
+artifact — the queryable perf trajectory; ``BENCH_OUT`` overrides the
+output directory).
 
     PYTHONPATH=src python -m benchmarks.run            # full
     PYTHONPATH=src python -m benchmarks.run --quick    # smaller loads
@@ -12,6 +15,8 @@ import argparse
 import sys
 import time
 import traceback
+
+from benchmarks.common import write_bench_json
 
 BENCHES = [
     ("cost_curves", "Fig 2/16: token count fails as a cost proxy"),
@@ -25,6 +30,8 @@ BENCHES = [
                        " TTFT on the real engine"),
     ("prefix_cache", "DESIGN.md §9: shared-prefix radix KV cache + "
                      "prefix-affinity routing on a multiturn trace"),
+    ("overload", "DESIGN.md §10: preemption under output-length "
+                 "misprediction; fair vs LIFO victim selection"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),
@@ -46,8 +53,13 @@ def main() -> None:
         t0 = time.monotonic()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            lines = []
             for line in mod.run(quick=args.quick):
+                lines.append(line)
                 print(line, flush=True)
+            write_bench_json(mod_name, lines,
+                             {"wall_s": time.monotonic() - t0,
+                              "quick": args.quick})
         except Exception:  # noqa: BLE001 — benchmark isolation
             failures += 1
             print(f"# FAILED {mod_name}", flush=True)

@@ -91,6 +91,11 @@ def run(quick: bool = False):
 def main():
     import argparse
 
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import write_bench_json
+    except ImportError:                    # python benchmarks/...py
+        from common import write_bench_json
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small trace for CI (<1 min)")
@@ -98,6 +103,7 @@ def main():
     lines = run(quick=args.smoke)
     for line in lines:
         print(line, flush=True)
+    write_bench_json("ttft_stallfree", lines, {"smoke": args.smoke})
     # CI gate: chunked prefill must strictly lower p99 TTFT without
     # giving up throughput (>5% regression fails)
     ok = lines[-1].rsplit("ok=", 1)[-1] == "True"

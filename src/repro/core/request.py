@@ -13,6 +13,7 @@ PREFILLING = "prefilling"
 DECODING = "decoding"
 FINISHED = "finished"
 DROPPED = "dropped"
+PREEMPTED = "preempted"     # evicted from the batch (recompute on re-admit)
 
 
 @dataclasses.dataclass
@@ -38,6 +39,12 @@ class Request:
     prefill_done: int = 0               # chunked-prefill progress
     cached_prefix: int = 0              # prompt tokens served from the
     #                                     shared-prefix cache (DESIGN.md §9)
+    # preemption (DESIGN.md §10) ------------------------------------------
+    n_preempted: int = 0                # times evicted for recompute
+    preempt_time: Optional[float] = None
+    generated_peak: int = 0             # largest observed output across
+    #                                     preempt/readmit cycles — floors
+    #                                     the re-admission KV reservation
     prompt_tokens: Optional[np.ndarray] = None   # token ids (engine decode,
     #                                     radix prefix keys, affinity routing)
 

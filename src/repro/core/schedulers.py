@@ -9,6 +9,19 @@ Protocol (driven by the simulator and the serving engine):
     on_complete(req, now, *, latency, tps, util)
                               request finished; feeds actual metrics back
                               (Algorithm 1 line 20 closes the loop)
+    on_preempt(req, now)      request evicted from the batch for recompute
+                              (DESIGN.md §10): every service charge this
+                              admission made is refunded, so re-admission
+                              re-charges from scratch and a preempt/readmit
+                              cycle bills exactly like an uninterrupted run
+    select_victim(running, now)
+                              fairness-aware preemption victim (FairBatching
+                              [Lyu et al., 2025]: victim choice *is* a
+                              fairness decision) — VTC picks the
+                              largest-counter client's youngest request,
+                              Equinox the highest-HF client's; the base
+                              policy is plain LIFO (youngest request —
+                              least recomputation lost)
 
 Service accounting (for fairness metrics) is uniform across policies:
 weighted tokens, input counted at admit, output counted as generated.
@@ -31,6 +44,10 @@ class SchedulerBase:
     # shared-prefix KV cache are billed at this weight (1.0 = cache-blind).
     # Settable per policy via ``make_scheduler(..., omega_cached=...)``.
     omega_cached: float = 1.0
+    # Preemption victim policy (DESIGN.md §10): "fair" lets VTC/Equinox
+    # pick the worst-counter client's youngest request; "lifo" forces the
+    # policy-blind youngest-request baseline everywhere.
+    victim_policy: str = "fair"
 
     def __init__(self):
         self.queues: Dict[str, collections.deque] = collections.defaultdict(
@@ -39,6 +56,10 @@ class SchedulerBase:
         # set, not list: on_arrival runs once per request, and an O(n) list
         # scan here is O(n²) over an LMSYS-sized trace
         self.arrived_clients = set()
+        # per-client in-batch request count (admitted, not yet completed
+        # or preempted) — with the queues this defines the *active* client
+        # set the VTC no-gaming lift is taken over
+        self.inflight: Dict[str, int] = collections.defaultdict(int)
 
     def billable_input(self, req: Request) -> float:
         """Input tokens after the cached-prefix discount: a cache-hit
@@ -52,9 +73,19 @@ class SchedulerBase:
         if req.client not in self.arrived_clients:
             self.arrived_clients.add(req.client)
             self._on_new_client(req.client)
+        elif not self.client_active(req.client):
+            # the client was idle (nothing queued on any replica, nothing
+            # in a batch) and is returning — re-apply the no-gaming lift
+            # so idle time never banks credit (VTC [Sheng et al.,
+            # OSDI'24]); a client actively backlogged on a peer replica
+            # must NOT be lifted away from its earned priority
+            self._on_client_return(req.client)
         self.queues[req.client].append(req)
 
     def _on_new_client(self, client: str):
+        pass
+
+    def _on_client_return(self, client: str):
         pass
 
     def has_waiting(self) -> bool:
@@ -63,16 +94,56 @@ class SchedulerBase:
     def queued_clients(self):
         return [c for c, q in self.queues.items() if q]
 
+    def active_clients(self):
+        """Clients with queued or in-batch work — the set the VTC/Equinox
+        returning-client lift is defined over.  Long-idle clients keep
+        stale-low counters; including them would let a returning client
+        catch up further than the no-gaming rule permits.  In a cluster,
+        ``share_fairness_state`` sets ``peers`` so queued work on every
+        replica counts (queues are per-replica, counters are global —
+        the lift must see the whole cluster's active set)."""
+        act = set()
+        for s in getattr(self, "peers", None) or (self,):
+            act.update(c for c, q in s.queues.items() if q)
+        act.update(c for c, n in self.inflight.items() if n > 0)
+        return act
+
+    def client_active(self, client: str) -> bool:
+        """Membership form of ``active_clients`` — O(replicas) per call,
+        so the per-arrival idle-return check doesn't rebuild the whole
+        set on an LMSYS-sized trace (the O(n²)-per-trace class PR 2
+        eliminated)."""
+        if self.inflight.get(client, 0) > 0:
+            return True
+        for s in getattr(self, "peers", None) or (self,):
+            if s.queues.get(client):
+                return True
+        return False
+
     # -- service accounting ----------------------------------------------------
     def on_admit(self, req: Request, now: float):
-        self.service[req.client] += req.weight * self.billable_input(req)
+        inc = req.weight * self.billable_input(req)
+        self.service[req.client] += inc
+        req._service_charged = inc
+        self.inflight[req.client] += 1
 
     def on_token(self, req: Request, now: float, n: int = 1):
-        self.service[req.client] += req.weight * C.OUT_TOKEN_WEIGHT * n
+        inc = req.weight * C.OUT_TOKEN_WEIGHT * n
+        self.service[req.client] += inc
+        req._service_charged = getattr(req, "_service_charged", 0.0) + inc
 
     def on_complete(self, req: Request, now: float, *, latency: float,
                     tps: float, util: float):
-        pass
+        self.inflight[req.client] = max(self.inflight[req.client] - 1, 0)
+
+    def on_preempt(self, req: Request, now: float):
+        """Refund semantics (DESIGN.md §10): preemption-by-recompute
+        discards the victim's work, so every service charge made since
+        its admission is returned — re-admission re-charges from scratch
+        and preempted service is never double-billed."""
+        self.service[req.client] -= getattr(req, "_service_charged", 0.0)
+        req._service_charged = 0.0
+        self.inflight[req.client] = max(self.inflight[req.client] - 1, 0)
 
     def on_requeue(self, req: Request, now: float):
         """A popped request failed admission (``canSchedule``/adaptive
@@ -80,8 +151,27 @@ class SchedulerBase:
         pop-time charge so failed attempts are free."""
         pass
 
-    def pop_next(self, now: float) -> Optional[Request]:
+    def pop_next(self, now: float, exclude=None) -> Optional[Request]:
+        """Next request to admit (policy order), or None.  ``exclude`` is
+        a set of client names whose head request already failed
+        ``canSchedule`` this iteration — the admission loop skips them so
+        one client's big (e.g. preempted-and-regrown) head request cannot
+        head-of-line-block every other client's small ones."""
         raise NotImplementedError
+
+    # -- preemption (DESIGN.md §10) ------------------------------------------
+    @staticmethod
+    def _youngest(reqs):
+        return max(reqs, key=lambda r: (r.arrival, r.rid))
+
+    def select_victim(self, running, now: float) -> Optional[Request]:
+        """Preemption victim among ``running``.  Base policy (and the
+        ``victim_policy="lifo"`` override): the youngest request — least
+        recomputation lost, no client awareness (the vLLM-style default
+        the fair policies are benchmarked against)."""
+        if not running:
+            return None
+        return self._youngest(running)
 
     # -- introspection -----------------------------------------------------------
     def fairness_scores(self) -> Dict[str, float]:
@@ -94,9 +184,11 @@ class FCFS(SchedulerBase):
     """Strict arrival order — no client isolation (production default)."""
     name = "fcfs"
 
-    def pop_next(self, now):
+    def pop_next(self, now, exclude=None):
         best, best_c = None, None
         for c, q in self.queues.items():
+            if exclude and c in exclude:
+                continue
             if q and (best is None or q[0].arrival < best.arrival):
                 best, best_c = q[0], c
         if best is not None:
@@ -122,22 +214,41 @@ class RPM(SchedulerBase):
             w.popleft()
         return len(w) < self.quota
 
-    def pop_next(self, now):
+    def pop_next(self, now, exclude=None):
         best, best_c = None, None
         for c, q in self.queues.items():
+            if exclude and c in exclude:
+                continue
             if q and self._allowed(c, now):
                 if best is None or q[0].arrival < best.arrival:
                     best, best_c = q[0], c
         if best is not None:
             self.queues[best_c].popleft()
             self.windows[best_c].append(now)
+            best._rpm_window_t = now     # so a refund hits THIS entry
         return best
+
+    def _refund_window(self, req):
+        """Remove the quota entry this request's pop charged.  Matched
+        by timestamp, not position: by preemption time the victim's
+        entry may no longer be the newest (or may have rolled out of
+        the window already), and popping someone else's valid entry
+        would transiently over-admit the client."""
+        try:
+            self.windows[req.client].remove(getattr(req, "_rpm_window_t",
+                                                    None))
+        except ValueError:
+            pass                          # entry already rolled out
 
     def on_requeue(self, req, now):
         # refund the quota entry charged at pop time
-        w = self.windows[req.client]
-        if w:
-            w.pop()
+        self._refund_window(req)
+
+    def on_preempt(self, req, now):
+        # the preempted request goes back to the queue head and will be
+        # popped (and quota-charged) again — refund this admission's entry
+        super().on_preempt(req, now)
+        self._refund_window(req)
 
 
 class VTC(SchedulerBase):
@@ -158,12 +269,25 @@ class VTC(SchedulerBase):
         self.predictor = predictor
         self.w = out_weight
 
-    def _on_new_client(self, client):
-        active_min = min(self.counter.values()) if self.counter else 0.0
-        self.counter[client] = max(self.counter.get(client, 0.0), active_min)
+    def _lift(self, client):
+        """No-gaming lift over *active* clients only (queued or running
+        work): idle clients' stale-low counters must not let a returning
+        client catch up beyond what VTC permits."""
+        active = self.active_clients() - {client}
+        vals = [self.counter[c] for c in active if c in self.counter]
+        lift = min(vals) if vals else 0.0
+        self.counter[client] = max(self.counter.get(client, 0.0), lift)
 
-    def pop_next(self, now):
+    def _on_new_client(self, client):
+        self._lift(client)
+
+    def _on_client_return(self, client):
+        self._lift(client)
+
+    def pop_next(self, now, exclude=None):
         cands = self.queued_clients()
+        if exclude:
+            cands = [c for c in cands if c not in exclude]
         if not cands:
             return None
         c = min(cands, key=lambda c: self.counter[c])
@@ -171,23 +295,42 @@ class VTC(SchedulerBase):
 
     def on_admit(self, req, now):
         super().on_admit(req, now)
-        self.counter[req.client] += req.weight * self.billable_input(req)
+        inc = req.weight * self.billable_input(req)
         if self.predictor is not None:
             self.predictor.predict(req)
-            self.counter[req.client] += (req.weight * self.w
-                                         * req.pred_output_len)
+            inc += req.weight * self.w * req.pred_output_len
+        self.counter[req.client] += inc
+        req._vtc_charged = inc
 
     def on_token(self, req, now, n=1):
         super().on_token(req, now, n)
         if self.predictor is None:
-            self.counter[req.client] += req.weight * self.w * n
+            inc = req.weight * self.w * n
+            self.counter[req.client] += inc
+            req._vtc_charged = getattr(req, "_vtc_charged", 0.0) + inc
 
     def on_complete(self, req, now, *, latency, tps, util):
+        super().on_complete(req, now, latency=latency, tps=tps, util=util)
         if self.predictor is not None:
             # reconcile predicted vs actual output tokens
             err = req.output_len - (req.pred_output_len or 0.0)
             self.counter[req.client] += req.weight * self.w * err
             self.predictor.observe(req, latency=latency, tps=tps, util=util)
+
+    def on_preempt(self, req, now):
+        super().on_preempt(req, now)
+        self.counter[req.client] -= getattr(req, "_vtc_charged", 0.0)
+        req._vtc_charged = 0.0
+
+    def select_victim(self, running, now):
+        """Largest-counter client's youngest request — the VTC framing of
+        FairBatching's rule: the client furthest ahead on service gives
+        work back first."""
+        if not running or self.victim_policy != "fair":
+            return super().select_victim(running, now)
+        worst = max({r.client for r in running},
+                    key=lambda c: (self.counter.get(c, 0.0), c))
+        return self._youngest([r for r in running if r.client == worst])
 
     def fairness_scores(self):
         return dict(self.counter)
@@ -219,10 +362,20 @@ class Equinox(SchedulerBase):
                          if self._lat_ema else lat)
         return min(lat / max(self._lat_ema, 1e-9), self.p.tilt_cap)
 
-    def _on_new_client(self, client):
+    def _lift(self, client):
+        """UFC/RFC no-gaming lift over *active* clients only (mirrors the
+        VTC rule): long-idle clients' stale-low counters are excluded."""
+        active = self.active_clients() - {client}
         for tbl in (self.ufc, self.rfc):
-            lift = min(tbl.values()) if tbl else 0.0
+            vals = [tbl[c] for c in active if c in tbl]
+            lift = min(vals) if vals else 0.0
             tbl[client] = max(tbl.get(client, 0.0), lift)
+
+    def _on_new_client(self, client):
+        self._lift(client)
+
+    def _on_client_return(self, client):
+        self._lift(client)
 
     def _hf(self):
         clients = list(self.ufc)
@@ -231,8 +384,10 @@ class Equinox(SchedulerBase):
         hf = C.hf_scores(ufc, rfc, self.p.alpha, self.p.beta)
         return dict(zip(clients, hf))
 
-    def pop_next(self, now):
+    def pop_next(self, now, exclude=None):
         cands = self.queued_clients()
+        if exclude:
+            cands = [c for c in cands if c not in exclude]
         if not cands:
             return None
         hf = self._hf()
@@ -276,10 +431,34 @@ class Equinox(SchedulerBase):
             self.ufc[req.client] += inc
             req._ufc_charged = getattr(req, "_ufc_charged", 0.0) + inc
 
+    def on_preempt(self, req, now):
+        """Refund this admission's UFC/RFC increments (tracked in
+        ``_ufc_charged``/``_rfc_charged``): the recomputed run re-charges
+        them, so a preempt/readmit cycle bills like an uninterrupted run
+        modulo the latency-tilt term (which legitimately reflects the
+        extra wait the preemption caused)."""
+        super().on_preempt(req, now)
+        self.ufc[req.client] -= getattr(req, "_ufc_charged", 0.0)
+        self.rfc[req.client] -= getattr(req, "_rfc_charged", 0.0)
+        req._ufc_charged = 0.0
+        req._rfc_charged = 0.0
+
+    def select_victim(self, running, now):
+        """Highest-HF client's youngest request (DESIGN.md §10): the most
+        holistically over-served client gives capacity back first, and
+        within that client the youngest request loses the least work."""
+        if not running or self.victim_policy != "fair":
+            return super().select_victim(running, now)
+        hf = self._hf()
+        worst = max({r.client for r in running},
+                    key=lambda c: (hf.get(c, 0.0), c))
+        return self._youngest([r for r in running if r.client == worst])
+
     def on_complete(self, req, now, *, latency, tps, util):
         """Algorithm 1 line 20: refresh HF_c with *actual* metrics — replace
         the prediction-based increments with observed ones, recalibrate
         P.map."""
+        super().on_complete(req, now, latency=latency, tps=tps, util=util)
         if self.p.charging == "upfront":
             lat = self._norm_latency(getattr(req, "_admit_wait", 0.0)
                                      + latency)
@@ -299,7 +478,7 @@ class Equinox(SchedulerBase):
 
 
 def make_scheduler(name: str, predictor=None, omega_cached: float = None,
-                   **kw):
+                   victim_policy: str = None, **kw):
     name = name.lower()
     if name == "fcfs":
         sched = FCFS()
@@ -317,4 +496,7 @@ def make_scheduler(name: str, predictor=None, omega_cached: float = None,
         raise ValueError(name)
     if omega_cached is not None:
         sched.omega_cached = omega_cached
+    if victim_policy is not None:
+        assert victim_policy in ("fair", "lifo"), victim_policy
+        sched.victim_policy = victim_policy
     return sched

@@ -130,7 +130,6 @@ class Simulator:
                  sim_cfg: SimConfig = SimConfig(), observer=None):
         self.cm = cost_model
         self.sched = scheduler
-        self.cfg = sim_cfg
         self.observer = observer
         cache = None
         if getattr(sim_cfg, "prefix_cache", False):
@@ -141,6 +140,13 @@ class Simulator:
             self.pool = PagePool(-(-budget // sim_cfg.page_size),
                                  sim_cfg.page_size)
             cache = PrefixCache(self.pool)
+            if sim_cfg.kv_page_size == 1:
+                # mirror the paged engine's page-rounded KV accounting
+                # (DESIGN.md §10) so sim/engine admission + preemption
+                # decisions stay identical with the cache on
+                sim_cfg = dataclasses.replace(sim_cfg,
+                                              kv_page_size=sim_cfg.page_size)
+        self.cfg = sim_cfg
         self.core = BatchCore(scheduler, cost_model, sim_cfg,
                               observer=observer, prefix_cache=cache)
         self.kv_budget = self.core.kv_budget
@@ -153,6 +159,12 @@ class Simulator:
         self.n_finished = 0
         self.core.kv_used = 0
         self.core.reserved.clear()
+        self.core.n_preemptions = 0
+
+    @property
+    def n_preemptions(self) -> int:
+        """Preemption events on this replica (cluster metric)."""
+        return self.core.n_preemptions
 
     # -- replica protocol (cluster layer) -----------------------------------
     @property
@@ -187,12 +199,19 @@ class Simulator:
         if not self.running and not self.sched.has_waiting():
             return False
 
+        # reservation reconciliation + fairness-aware preemption
+        # (DESIGN.md §10) — before the iteration executes, so victims
+        # neither prefill nor decode this step
+        preempted = self.core.prepare_iteration(t, self.running)
+        for r in preempted:
+            self.running.remove(r)
+
         # one continuous-batching iteration
         plan = self.core.plan_prefill(self.running)
         prefill_tokens = sum(c for _, c in plan)
         decoding = [r for r in self.running if r.state == DECODING]
         ctxs = [r.prompt_len + r.generated for r in decoding]
-        fresh = bool(admitted) or not self.running
+        fresh = bool(admitted) or bool(preempted) or not self.running
         t_iter = self.core.iteration_time(plan, ctxs, fresh)
         t += t_iter
         self.t = t
@@ -203,7 +222,10 @@ class Simulator:
             if r.state == PREFILLING and r.prefill_done >= r.prompt_len:
                 r.state = DECODING
                 r.generated = 1              # prefill emits first token
-                r.first_token_time = t
+                if r.first_token_time is None:
+                    # kept across preempt/recompute cycles: the first
+                    # token was already streamed at its original stamp
+                    r.first_token_time = t
                 self.core.note_prefill_complete(r, t)
                 self.sched.on_token(r, t, 1)
             elif r.state == DECODING:

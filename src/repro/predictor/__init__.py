@@ -1,5 +1,6 @@
-from repro.predictor.mope import MoPE, Oracle, SingleProxy, l1_error
+from repro.predictor.mope import (MoPE, Oracle, ScaledOracle, SingleProxy,
+                                  l1_error)
 from repro.predictor.router import Router, router_accuracy, train_router
 
-__all__ = ["MoPE", "Oracle", "SingleProxy", "l1_error", "Router",
-           "router_accuracy", "train_router"]
+__all__ = ["MoPE", "Oracle", "ScaledOracle", "SingleProxy", "l1_error",
+           "Router", "router_accuracy", "train_router"]

@@ -125,6 +125,23 @@ class Oracle(BasePredictor):
         return float(req.output_len)
 
 
+class ScaledOracle(BasePredictor):
+    """Oracle scaled by a constant factor — a controllable misprediction
+    stressor.  ``factor < 1`` under-predicts output lengths (so KV
+    reservations systematically under-commit and the preemption /
+    reconciliation path, DESIGN.md §10, must absorb the difference);
+    ``calibrate=False`` by default so the online bias EMA does not learn
+    the error away mid-benchmark."""
+
+    def __init__(self, cost_model: CostModel, factor: float = 0.25,
+                 calibrate: bool = False):
+        super().__init__(cost_model, calibrate=calibrate)
+        self.factor = factor
+
+    def predict_tokens(self, req: Request) -> float:
+        return max(float(req.output_len) * self.factor, 1.0)
+
+
 def l1_error(predictor: BasePredictor, corpus) -> float:
     """Mean absolute token error (paper Fig. 7a: 80 → 33 → 25)."""
     errs = []

@@ -24,6 +24,12 @@ owns every scheduling decision so simulator and engine cannot drift:
   (each chunk's ``avg_ctx`` still spans the cached prefix — attention
   over cached pages is real work and stays charged);
 - iteration timing from the cost model (incl. per-refresh host overhead);
+- reservation reconciliation + fairness-aware preemption (DESIGN.md
+  §10): the admission-time KV reservation is a *prediction*; every
+  iteration ``prepare_iteration`` grows it to the request's actual
+  footprint and, when the budget M would be exceeded, preempts the
+  scheduler-selected victim by recompute — release its pages, refund its
+  service charges, requeue it at the head of its client queue;
 - completion: release the KV reservation and feed *actual* latency /
   TPS / utilization back to the scheduler and predictor (Algorithm 1
   line 20 — the recalibration half of the loop).
@@ -33,7 +39,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core.request import FINISHED, PREFILLING, Request
+from repro.core.request import (DECODING, FINISHED, PREEMPTED, PREFILLING,
+                                Request)
 from repro.core.schedulers import SchedulerBase
 from repro.serving.costmodel import CostModel
 
@@ -51,16 +58,24 @@ class BatchConfig:
     adaptive_batching: bool = True
     target_iter_time: float = 0.25    # s; adaptive-batching admission cap
     default_reserve: int = 256        # KV reservation w/o predictor
+    # KV accounting granularity (DESIGN.md §10): reservations and actual
+    # footprints are rounded up to this many tokens.  The paged engine
+    # sets it to its page size so that "token budget respected" implies
+    # "page pool never exhausts" (sums of page-rounded footprints divide
+    # exactly into pages); 1 = exact token accounting (slots backend,
+    # plain simulator).
+    kv_page_size: int = 1
 
 
 class BatchCore:
     """Admission + KV accounting + completion feedback, frontend-agnostic.
 
     Drivers call, per iteration:
-        ``admit(now, batch_len)``     -> newly admitted requests
-        ``plan_prefill(running)``     -> [(req, chunk), ...] prefill plan
-        ``iteration_time(plan, ...)`` -> modeled iteration duration
-        ``complete(req, now, ...)``   -> close a finished request
+        ``admit(now, batch_len)``         -> newly admitted requests
+        ``prepare_iteration(now, run)``   -> reconcile + preempted victims
+        ``plan_prefill(running)``         -> [(req, chunk), ...] prefill plan
+        ``iteration_time(plan, ...)``     -> modeled iteration duration
+        ``complete(req, now, ...)``       -> close a finished request
     """
 
     def __init__(self, scheduler: SchedulerBase, cost_model: CostModel,
@@ -74,13 +89,40 @@ class BatchCore:
                           or cost_model.kv_budget_tokens())
         self.kv_used = 0
         self.reserved: Dict[int, int] = {}
+        self.kv_page = max(getattr(self.cfg, "kv_page_size", 1) or 1, 1)
+        self.n_preemptions = 0          # preemption events on this replica
+        self.blocked_client = None      # set by try_admit on canSchedule fail
+
+    def _round_kv(self, tokens: int) -> int:
+        """Round a KV footprint up to the accounting granularity."""
+        ps = self.kv_page
+        return -(-tokens // ps) * ps if ps > 1 else tokens
 
     # -- canSchedule ---------------------------------------------------------
     def reserve_amount(self, req: Request) -> int:
-        """KV tokens to reserve: prompt + predicted output (or default)."""
+        """KV tokens to reserve at admission: *uncached* prompt + predicted
+        output.  Adopted prefix pages are already resident and refcounted
+        (DESIGN.md §9) — charging the full prompt would double-count them
+        and under-admit cache hits.  A preempted request's reservation is
+        floored at its largest observed output (``generated_peak``), so a
+        known misprediction is not repeated at re-admission."""
         pred = req.pred_output_len
-        return req.prompt_len + int(pred if pred is not None
-                                    else self.cfg.default_reserve)
+        pred = int(pred if pred is not None else self.cfg.default_reserve)
+        return self._round_kv((req.prompt_len - req.cached_prefix)
+                              + max(pred, req.generated_peak))
+
+    def kv_headroom(self) -> int:
+        """Effective KV budget for the canSchedule / preemption checks:
+        the configured budget minus pool capacity held by cache-pinned
+        pages that live adopters reference but no reservation charges
+        (the satellite-1 discount) — without this deduction the token
+        accounting could over-commit the physical pool even while
+        ``kv_used <= kv_budget`` (DESIGN.md §10)."""
+        if self.prefix_cache is None:
+            return self.kv_budget
+        pool = self.prefix_cache.pool
+        return self.kv_budget - (pool.page_size
+                                 * pool.pinned_unaccounted_pages())
 
     def kv_load(self) -> float:
         """Fraction of the KV budget currently reserved (dispatcher signal)."""
@@ -90,13 +132,20 @@ class BatchCore:
         self.sched.queues[req.client].appendleft(req)
         self.sched.on_requeue(req, now)
 
-    def try_admit(self, now: float, batch_len: int) -> Optional[Request]:
+    def try_admit(self, now: float, batch_len: int,
+                  exclude=None) -> Optional[Request]:
         """One Algorithm-1 admission attempt.  Returns the admitted request
         or None (batch full / queue empty / canSchedule failed — in which
-        case the popped request is put back at the head of its queue)."""
+        case the popped request is put back at the head of its queue).
+        After a None, ``blocked_client`` names the client whose head
+        failed ``canSchedule`` (the driver excludes it and keeps
+        admitting other clients — one client's big head request, e.g. a
+        preempted-and-regrown one, must not head-of-line-block everyone
+        else) or is None when admission should stop for this iteration."""
+        self.blocked_client = None
         if batch_len >= self.cfg.max_batch:
             return None
-        req = self.sched.pop_next(now)
+        req = self.sched.pop_next(now, exclude)
         if req is None:
             return None
         # shared-prefix lookup (DESIGN.md §9): page-aligned cached prefix
@@ -105,15 +154,17 @@ class BatchCore:
         req.cached_prefix = (self.prefix_cache.lookup(req, now)
                              if self.prefix_cache is not None else 0)
         need = self.reserve_amount(req)
-        if self.kv_used + need > self.kv_budget and batch_len > 0:
-            # canSchedule failed -> requeue at head, stop admitting
+        if self.kv_used + need > self.kv_headroom() and batch_len > 0:
+            # canSchedule failed -> requeue at head, skip this client
             self._requeue(req, now)
+            self.blocked_client = req.client
             return None
         if self.cfg.adaptive_batching and batch_len > 0:
             proj = self.cm.prefill_time(
                 min(req.prompt_len - req.cached_prefix,
                     self.cfg.prefill_chunk))
             if proj > self.cfg.target_iter_time:
+                # iteration-time budget: stop admitting entirely
                 self._requeue(req, now)
                 return None
         self.kv_used += need
@@ -131,16 +182,99 @@ class BatchCore:
             self.observer.on_admit(req, now)
         return req
 
-    def admit(self, now: float, batch_len: int) -> List[Request]:
+    def admit(self, now: float, batch_len: int, has_capacity=None,
+              on_admitted=None) -> List[Request]:
         """Admission loop: admit while the batch cap, KV budget and
-        adaptive-batching projection all hold."""
+        adaptive-batching projection all hold, skipping (not stopping at)
+        clients whose head request does not fit the remaining budget.
+        The one implementation of the skip protocol — the engine passes
+        ``has_capacity`` (free decode slot available?) and ``on_admitted``
+        (bind the request to a slot) so its slot bookkeeping rides the
+        same loop instead of duplicating it."""
         admitted: List[Request] = []
-        while True:
-            req = self.try_admit(now, batch_len + len(admitted))
-            if req is None:
+        blocked = set()
+        while has_capacity is None or has_capacity():
+            req = self.try_admit(now, batch_len + len(admitted),
+                                 exclude=blocked)
+            if req is not None:
+                if on_admitted is not None:
+                    on_admitted(req)
+                admitted.append(req)
+                continue
+            if self.blocked_client is None:
                 break
-            admitted.append(req)
+            blocked.add(self.blocked_client)
         return admitted
+
+    # -- reservation reconciliation + preemption (DESIGN.md §10) -------------
+    def footprint(self, req: Request) -> int:
+        """Actual private KV tokens ``req`` needs through its *next*
+        decode write: the uncached prompt plus the tokens generated so
+        far (the next decode appends its KV at row ``prompt+generated``,
+        so this count covers that write)."""
+        return (req.prompt_len - req.cached_prefix) + req.generated
+
+    def reconcile(self, req: Request) -> int:
+        """Grow the reservation in place when decode has outrun the
+        admission-time prediction (the over-commit bug this subsystem
+        fixes: ``kv_used`` used to stay frozen at the reservation while
+        the real footprint kept growing).  Returns the extension."""
+        need = self._round_kv(self.footprint(req))
+        held = self.reserved.get(req.rid, 0)
+        if need <= held:
+            return 0
+        self.kv_used += need - held
+        self.reserved[req.rid] = need
+        return need - held
+
+    def preempt(self, req: Request, now: float) -> Request:
+        """Preempt by recompute: drop the reservation and the pages
+        (refcounted — shared prefix pages survive in the cache, so
+        re-prefill can re-adopt them cheaply), refund the service charges
+        (``scheduler.on_preempt``), reset the request and requeue it at
+        the *head* of its client queue."""
+        self.kv_used -= self.reserved.pop(req.rid, 0)
+        self.release_kv(req)
+        req.generated_peak = max(req.generated_peak, req.generated)
+        req.state = PREEMPTED
+        req.n_preempted += 1
+        req.preempt_time = now
+        req.generated = 0
+        req.prefill_done = 0
+        req.cached_prefix = 0
+        self.n_preemptions += 1
+        self.sched.on_preempt(req, now)
+        self.sched.queues[req.client].appendleft(req)
+        if self.observer is not None and hasattr(self.observer,
+                                                 "on_preempt"):
+            self.observer.on_preempt(req, now)
+        return req
+
+    def prepare_iteration(self, now: float, running: List[Request]
+                          ) -> List[Request]:
+        """Called after admission, before the iteration executes: grow
+        every DECODING request's reservation to its actual footprint and,
+        while the budget is exceeded, preempt the scheduler-selected
+        victim (never the last running request — it proceeds serially,
+        exactly like an over-budget solo admission).  Returns the victims
+        in preemption order; the driver removes them from its batch and
+        frees backend state."""
+        for r in running:
+            if r.state == DECODING:
+                self.reconcile(r)
+        preempted: List[Request] = []
+        # kv_headroom is re-evaluated per victim: preempting an adopter
+        # releases its adoptions, which can shrink the pinned deduction
+        while self.kv_used > self.kv_headroom():
+            cands = [r for r in running if r not in preempted]
+            if len(cands) <= 1:
+                break
+            victim = self.sched.select_victim(cands, now)
+            if victim is None:
+                break
+            self.preempt(victim, now)
+            preempted.append(victim)
+        return preempted
 
     # -- chunked prefill -----------------------------------------------------
     def plan_prefill(self, running: List[Request]):
@@ -222,17 +356,21 @@ class BatchCore:
         """Close the loop (Algorithm 1 line 20): free the reservation and
         feed actual metrics to the scheduler (which recalibrates the
         predictor).  ``latency`` is GPU execution time — queue wait is
-        excluded (§3.2: TPS is "tokens per second in GPU").  ``util``
-        defaults to the cost model's MFU over the request's window."""
+        excluded (§3.2: TPS is "tokens per second in GPU"), and so are
+        cached-prefix prompt tokens, which the GPU never computed —
+        counting them over-credited RFC for conversational clients.
+        ``util`` defaults to the cost model's MFU over the request's
+        window."""
         req.state = FINISHED
         if req.finish_time is None:
             req.finish_time = now
         self.kv_used -= self.reserved.pop(req.rid, 0)
         exec_lat = max(now - (req.admit_time if req.admit_time is not None
                               else now), 1e-9)
-        tps = (req.prompt_len + req.generated) / exec_lat
+        computed = (req.prompt_len - req.cached_prefix) + req.generated
+        tps = computed / exec_lat
         if util is None:
-            util = self.cm.mfu(req.prompt_len + req.generated, exec_lat)
+            util = self.cm.mfu(computed, exec_lat)
         self.sched.on_complete(req, now, latency=exec_lat, tps=tps,
                                util=util)
         if self.observer is not None:

@@ -55,6 +55,8 @@ from repro.serving.costmodel import CostModel
 # Per-client fairness containers that must be cluster-global.  Queues are
 # deliberately NOT shared — they are the per-replica dispatch outcome.
 _SHARED_ATTRS = ("service", "arrived_clients",   # SchedulerBase
+                 "inflight",                     # active-client set for the
+                 #                                 returning-client lift
                  "counter",                      # VTC
                  "ufc", "rfc",                   # Equinox
                  "windows")                      # RPM quota windows
@@ -75,6 +77,10 @@ def share_fairness_state(scheds: Sequence[SchedulerBase]):
         for attr in _SHARED_ATTRS:
             if hasattr(head, attr):
                 setattr(s, attr, getattr(head, attr))
+    for s in scheds:
+        # queues stay replica-local, but the returning-client lift must
+        # see queued work cluster-wide (SchedulerBase.active_clients)
+        s.peers = list(scheds)
     return scheds
 
 
@@ -191,6 +197,18 @@ class ClusterResult:
     def replica_finished(self) -> List[int]:
         return [rep.n_finished for rep in self.replicas]
 
+    def replica_preemptions(self) -> List[int]:
+        """Preemption events per replica (DESIGN.md §10)."""
+        return [getattr(rep, "n_preemptions", 0) for rep in self.replicas]
+
+    def preemption_rate(self) -> List[float]:
+        """Per-replica preemptions per finished request — the signal a
+        dispatcher watches for replicas thrashing on KV recompute (a
+        persistently hot replica indicates misprediction pressure the
+        router should steer long-output work away from)."""
+        return [p / max(f, 1) for p, f in zip(self.replica_preemptions(),
+                                              self.replica_finished())]
+
     def cache_hit_rate(self) -> Optional[float]:
         """Cluster-wide token-level prefix-cache hit rate (None when no
         replica runs a prefix cache)."""
@@ -216,6 +234,8 @@ class ClusterResult:
             "finished": sum(r.state == FINISHED for r in self.requests),
             "total": len(self.requests),
             "per_replica": self.replica_finished(),
+            "preemptions_per_replica": self.replica_preemptions(),
+            "preemption_rate": self.preemption_rate(),
         }
 
 

@@ -101,7 +101,12 @@ class ServingEngine:
                         # stall-free chunked prefill + adaptive batching
                         # when the model layer supports cache continuation
                         adaptive_batching=chunked,
-                        stall_free=chunked),
+                        stall_free=chunked,
+                        # page-rounded KV accounting on the paged backend
+                        # (DESIGN.md §10): budget respected => pool never
+                        # physically exhausts
+                        kv_page_size=page_size if backend == "paged"
+                        else 1),
             observer=observer)
         self.kv_budget = self.core.kv_budget
         self.sample_temp = sample_temp
@@ -159,6 +164,11 @@ class ServingEngine:
     @property
     def n_finished(self) -> int:
         return len(self.finished)
+
+    @property
+    def n_preemptions(self) -> int:
+        """Preemption events on this replica (cluster metric)."""
+        return self.core.n_preemptions
 
     def kv_load(self) -> float:
         return self.core.kv_load()
@@ -221,6 +231,20 @@ class ServingEngine:
         req._pos = 0
         self.slots[slot] = req
         self.running.append(req)
+
+    def _drop_backend_state(self, req: Request):
+        """Preemption (DESIGN.md §10): free the victim's physical KV —
+        pool pages on the paged backend (already released through the
+        prefix cache's refcounts when one is attached), the partial
+        prefill cache on the slots backend — and vacate its slot.  The
+        recompute path rebuilds everything at re-admission."""
+        if self.backend == "paged":
+            self.pool.release_request(req.rid)
+        req._pcache = None
+        slot = getattr(req, "_slot", None)
+        if slot is not None and self.slots[slot] is req:
+            self.slots[slot] = None
+        req._slot = None
 
     def _prefill_whole(self, req: Request):
         """Legacy one-shot prompt prefill (architectures without
@@ -374,17 +398,14 @@ class ServingEngine:
         Returns #running requests (1 when only quota-blocked queued work
         exists — the clock still advanced), 0 when idle."""
         now = self.now()
-        # 1. admission (Algorithm 1 inner loop, shared BatchCore)
-        admitted = []
-        while True:
-            slot = self._free_slot()
-            if slot < 0:
-                break
-            req = self.core.try_admit(now, len(self.running))
-            if req is None:
-                break
-            self._bind_slot(req, slot)
-            admitted.append(req)
+        # 1. admission (Algorithm 1 inner loop, the one BatchCore.admit
+        #    skip-protocol implementation; slot bookkeeping rides its
+        #    callbacks, so sim and engine cannot drift)
+        admitted = self.core.admit(
+            now, len(self.running),
+            has_capacity=lambda: self._free_slot() >= 0,
+            on_admitted=lambda req: self._bind_slot(req,
+                                                    self._free_slot()))
         if not self.running:
             if not self.sched.has_waiting():
                 return 0
@@ -395,6 +416,17 @@ class ServingEngine:
             self.t_model += self.core.iteration_time([], [], True)
             self.iterations += 1
             return 1
+
+        # 1b. reservation reconciliation + fairness-aware preemption
+        #     (DESIGN.md §10, mirrors Simulator.step): grow reservations
+        #     to the KV this iteration will actually write and preempt
+        #     fairly if the budget would be exceeded — BEFORE any model
+        #     work, so victims neither prefill nor decode (and the paged
+        #     pool never reaches physical exhaustion)
+        preempted = self.core.prepare_iteration(now, self.running)
+        for req in preempted:
+            self._drop_backend_state(req)
+            self.running.remove(req)
 
         # 2. chunked prefill (per-request plan shared with the simulator)
         plan = self.core.plan_prefill(self.running)
@@ -412,7 +444,7 @@ class ServingEngine:
 
         # 4. modeled clock advance (timing rule shared with the simulator)
         ctxs = [r.prompt_len + r.generated for r in decoding]
-        fresh = bool(admitted)
+        fresh = bool(admitted) or bool(preempted)
         t_iter = self.core.iteration_time(plan, ctxs, fresh)
         self.t_model += t_iter
         now = self.now()
@@ -427,7 +459,10 @@ class ServingEngine:
             self._install_prefill(req, row)
             req.state = DECODING
             req.generated = 1              # prefill emits first token
-            req.first_token_time = now
+            if req.first_token_time is None:
+                # kept across preempt/recompute cycles: the first token
+                # was already streamed at its original stamp
+                req.first_token_time = now
             self.core.note_prefill_complete(req, now)
             self.sched.on_token(req, now, 1)
             if req.generated >= req.output_len:

@@ -33,6 +33,13 @@ class PagePool:
         self.owned: Dict[int, List[int]] = {}
         self.refcount: Dict[int, int] = {}      # live pages only
         self.cached: Set[int] = set()           # pinned by the prefix cache
+        self.adopted: Dict[int, Set[int]] = {}  # rid -> pages it adopted
+        self.adopted_refs: Dict[int, int] = {}  # page -> adopter refcount
+        # memoized pinned_unaccounted_pages(): the admission/preemption
+        # hot path queries it per attempt, but its inputs only change on
+        # adopt/free/pin/unpin — recompute lazily on those mutations
+        self._pinned_memo = 0
+        self._pinned_dirty = False
         # prefix-cache eviction hook: called with the number of pages still
         # missing; must return how many it actually released to the free
         # list (0 when nothing is evictable)
@@ -75,7 +82,10 @@ class PagePool:
             if p not in self.refcount:
                 raise ValueError(f"page {p} is not live; cannot adopt")
             self.refcount[p] += 1
+            self.adopted_refs[p] = self.adopted_refs.get(p, 0) + 1
+        self.adopted.setdefault(rid, set()).update(pages)
         self.owned.setdefault(rid, []).extend(pages)
+        self._pinned_dirty = True
         return pages
 
     def extend(self, rid: int, old_tokens: int, new_tokens: int) -> List[int]:
@@ -101,13 +111,34 @@ class PagePool:
         if rid not in self.owned:
             raise ValueError(f"free_request({rid}): unknown rid "
                              "(double free?)")
+        adopted = self.adopted.pop(rid, ())
+        # even an adoption-free release can change pinned state: an
+        # allocator freeing a cached page a live adopter still holds
+        # turns that page pinned-unaccounted
+        self._pinned_dirty = True
         for p in reversed(self.owned.pop(rid)):
             self.refcount[p] -= 1
+            if p in adopted:
+                self.adopted_refs[p] -= 1
+                if self.adopted_refs[p] == 0:
+                    del self.adopted_refs[p]
             if self.refcount[p] < 0:
                 raise AssertionError(f"page {p}: negative refcount")
             if self.refcount[p] == 0 and p not in self.cached:
                 del self.refcount[p]
                 self.free.append(p)
+
+    def release_request(self, rid: int) -> bool:
+        """Idempotent ``free_request`` for preemption paths (DESIGN.md
+        §10): a victim may hold no pages yet (preempted before its first
+        prefill chunk) or have been released through the prefix cache
+        already.  Returns whether pages were actually dropped.  The
+        strict, raising ``free_request`` stays the completion-path API —
+        a double free there is still a refcount bug."""
+        if rid not in self.owned:
+            return False
+        self.free_request(rid)
+        return True
 
     # -- prefix-cache pinning -------------------------------------------------
     def mark_cached(self, pages: Sequence[int]):
@@ -116,6 +147,7 @@ class PagePool:
             if p not in self.refcount:
                 raise ValueError(f"page {p} is not live; cannot cache")
             self.cached.add(p)
+        self._pinned_dirty = True
 
     def release_cached(self, pages: Sequence[int]) -> int:
         """Unpin pages (prefix-cache eviction); refcount-0 pages return to
@@ -127,7 +159,26 @@ class PagePool:
                 self.refcount.pop(p, None)
                 self.free.append(p)
                 freed += 1
+        self._pinned_dirty = True
         return freed
+
+    def pinned_unaccounted_pages(self) -> int:
+        """Cache-pinned pages whose only live references are adoptions:
+        resident, unreclaimable, yet charged to no KV reservation (the
+        adopter's reservation discounts its cached prefix, DESIGN.md
+        §10).  The budget check must shrink by these or the token
+        accounting could over-commit the physical pool.  A page whose
+        original allocator is still live is excluded — that request's
+        reservation already covers it.  Memoized: the scan only reruns
+        after an adopt/free/pin/unpin mutation, not per admission
+        attempt."""
+        if self._pinned_dirty:
+            self._pinned_memo = sum(
+                1 for p in self.cached
+                if self.refcount.get(p, 0) > 0
+                and self.adopted_refs.get(p, 0) == self.refcount[p])
+            self._pinned_dirty = False
+        return self._pinned_memo
 
     @property
     def used_pages(self) -> int:

@@ -1,0 +1,618 @@
+"""Preemption + reservation reconciliation (DESIGN.md §10).
+
+The over-commit bug this guards against: ``BatchCore`` reserved KV for
+prompt + *predicted* output at admission and never reconciled, so a
+request decoding past its prediction grew its real footprint while
+``kv_used`` stayed frozen — the simulator silently over-committed the
+budget M and the engine's ``PagePool`` allocated until it physically
+exhausted.  These tests pin the fix: per-token reconciliation, fair
+victim selection, refund semantics, and sim/engine parity of the
+preemption decisions themselves.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import SMOKE_FACTORIES, get_config
+from repro.core import Request, SimConfig, Simulator, make_scheduler
+from repro.core.request import DECODING, PREEMPTED
+from repro.core.schedulers import VTC, Equinox
+from repro.serving.batch_core import BatchConfig, BatchCore
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.serving.kv_cache import PagePool
+from repro.serving.prefix_cache import PrefixCache
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def _req(rid, client="c", arrival=0.0, p=20, o=40, pred=None):
+    r = Request(rid=rid, client=client, arrival=arrival, prompt_len=p,
+                output_len=o, keywords=("chat",))
+    if pred is not None:
+        r.pred_output_len = float(pred)
+    return r
+
+
+class PreemptSpy:
+    """Observer recording the three scheduling decisions BatchCore owns:
+    admissions, chunk plans and preemption victims."""
+
+    def __init__(self):
+        self.order, self.chunks, self.preempts = [], [], []
+
+    def on_admit(self, req, now):
+        self.order.append(req.rid)
+
+    def on_prefill_chunk(self, req, chunk):
+        self.chunks.append((req.rid, chunk))
+
+    def on_preempt(self, req, now):
+        self.preempts.append(req.rid)
+
+    def on_complete(self, req, now, **kw):
+        pass
+
+
+# -- reconciliation unit behavior ---------------------------------------------
+def test_reconcile_extends_reservation_past_prediction(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(max_batch=4, kv_budget_tokens=1000,
+                                 adaptive_batching=False))
+    r = _req(0, p=50, o=100, pred=10)
+    core.sched.on_arrival(r, 0.0)
+    assert core.try_admit(0.0, 0) is r
+    assert core.reserved[0] == 60                 # prompt + pred
+    r.state = DECODING
+    r.generated = 5                               # still inside the pred
+    assert core.reconcile(r) == 0
+    r.generated = 30                              # outran the prediction
+    assert core.reconcile(r) == 20
+    assert core.reserved[0] == 80 and core.kv_used == 80
+    assert core.reconcile(r) == 0                 # idempotent
+
+
+def test_reconcile_rounds_to_kv_page(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(max_batch=4, kv_budget_tokens=1000,
+                                 adaptive_batching=False, kv_page_size=16))
+    r = _req(0, p=20, o=64, pred=4)
+    core.sched.on_arrival(r, 0.0)
+    core.try_admit(0.0, 0)
+    assert core.reserved[0] == 32                 # ceil(24 / 16) pages
+    r.state = DECODING
+    r.generated = 20                              # footprint 40 -> 48
+    core.reconcile(r)
+    assert core.reserved[0] == 48
+    assert core.kv_used % 16 == 0
+
+
+def test_preempt_releases_refunds_and_requeues_at_head(cm):
+    sched = make_scheduler("fcfs")
+    core = BatchCore(sched, cm,
+                     BatchConfig(max_batch=4, kv_budget_tokens=200,
+                                 adaptive_batching=False))
+    a, b = _req(0, p=20, pred=10), _req(1, p=20, pred=10)
+    waiting = _req(2, p=20, pred=10, arrival=1.0)
+    for r in (a, b):
+        sched.on_arrival(r, 0.0)
+    sched.on_arrival(waiting, 1.0)
+    assert [r.rid for r in core.admit(0.0, 0)] == [0, 1, 2]
+    service_before = sched.service["c"]
+    a.state = DECODING
+    a.generated = 7
+    sched.on_token(a, 2.0, 7)
+    core.preempt(a, 2.0)
+    assert a.state == PREEMPTED
+    assert a.n_preempted == 1 and a.preempt_time == 2.0
+    assert a.generated == 0 and a.prefill_done == 0
+    assert a.generated_peak == 7                  # floors re-admission
+    assert 0 not in core.reserved
+    assert core.kv_used == core.reserved[1] + core.reserved[2]
+    # requeued at the head, ahead of any waiting request
+    assert sched.queues["c"][0] is a
+    # full refund: the 7 token charges are undone along with the input
+    # charge, leaving exactly the pre-token service minus a's input
+    assert sched.service["c"] == pytest.approx(service_before - 20)
+
+
+def test_sole_running_request_never_preempted(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(max_batch=4, kv_budget_tokens=100,
+                                 adaptive_batching=False))
+    r = _req(0, p=80, o=200, pred=10)   # alone it may exceed the budget
+    core.sched.on_arrival(r, 0.0)
+    assert core.try_admit(0.0, 0) is r
+    r.state = DECODING
+    r.generated = 150
+    assert core.prepare_iteration(1.0, [r]) == []
+    assert core.kv_used > core.kv_budget          # tolerated when serial
+
+
+def test_prepare_iteration_preempts_down_to_budget(cm):
+    sched = make_scheduler("fcfs")
+    core = BatchCore(sched, cm,
+                     BatchConfig(max_batch=8, kv_budget_tokens=200,
+                                 adaptive_batching=False))
+    reqs = [_req(i, p=20, o=100, pred=5, arrival=float(i)) for i in range(4)]
+    for r in reqs:
+        sched.on_arrival(r, r.arrival)
+    assert len(core.admit(3.0, 0)) == 4           # 25 each -> all fit
+    for r in reqs:
+        r.state = DECODING
+        r.generated = 60                          # 4 x 80 = 320 > 200
+    preempted = core.prepare_iteration(4.0, reqs)
+    assert preempted                               # somebody had to go
+    # base policy is LIFO: youngest victims first
+    assert [r.rid for r in preempted] == [3, 2]
+    assert core.kv_used <= core.kv_budget
+    for r in preempted:
+        assert r.state == PREEMPTED
+
+
+# -- fairness-aware victim selection ------------------------------------------
+def test_vtc_victim_is_largest_counter_clients_youngest():
+    s = VTC()
+    s.counter = {"a": 100.0, "b": 5.0}
+    running = [_req(0, "a", 1.0), _req(1, "a", 3.0), _req(2, "b", 5.0)]
+    assert s.select_victim(running, 0.0).rid == 1    # a's youngest
+    s.victim_policy = "lifo"
+    assert s.select_victim(running, 0.0).rid == 2    # youngest overall
+
+
+def test_equinox_victim_is_highest_hf_clients_youngest():
+    class Pred:
+        def predict(self, req):
+            req.pred_output_len = 1.0
+
+        def observe(self, *a, **k):
+            pass
+
+    s = Equinox(Pred())
+    s.ufc = {"a": 100.0, "b": 1.0}
+    s.rfc = {"a": 0.0, "b": 0.0}
+    running = [_req(0, "a", 1.0), _req(1, "a", 3.0), _req(2, "b", 5.0)]
+    assert s.select_victim(running, 0.0).rid == 1
+    s.victim_policy = "lifo"
+    assert s.select_victim(running, 0.0).rid == 2
+
+
+def test_rpm_preempt_refunds_quota_window():
+    s = make_scheduler("rpm", quota_per_min=2)
+    r = _req(0)
+    s.on_arrival(r, 0.0)
+    assert s.pop_next(0.0) is r
+    s.on_admit(r, 0.0)
+    assert len(s.windows["c"]) == 1
+    s.on_preempt(r, 1.0)
+    assert len(s.windows["c"]) == 0   # re-admission charges a fresh entry
+
+
+def test_rpm_preempt_refund_hits_own_entry_not_newest():
+    """The refund must remove the victim's OWN window entry: popping the
+    newest would erase another admission's still-valid quota charge and
+    transiently over-admit the client."""
+    s = make_scheduler("rpm", quota_per_min=2)
+    r1, r2 = _req(0), _req(1, arrival=50.0)
+    s.on_arrival(r1, 0.0)
+    assert s.pop_next(0.0) is r1
+    s.on_admit(r1, 0.0)
+    s.on_arrival(r2, 50.0)
+    assert s.pop_next(50.0) is r2             # window [0.0, 50.0]
+    s.on_admit(r2, 50.0)
+    s.on_preempt(r1, 70.0)                    # r1 was charged at t=0
+    assert list(s.windows["c"]) == [50.0]     # r2's entry survives
+
+
+# -- refund semantics: preempt/readmit == uninterrupted (satellite b) ---------
+def _drive(sched, req, *, preempt_after=None, n_out=9):
+    """Admit, generate ``n_out`` tokens, complete — optionally preempting
+    after ``preempt_after`` tokens and re-running from scratch."""
+    sched.on_arrival(req, req.arrival)
+    r = sched.pop_next(req.arrival)
+    sched.on_admit(r, req.arrival)
+    produced = 0
+    if preempt_after is not None:
+        for _ in range(preempt_after):
+            sched.on_token(r, 1.0, 1)
+        sched.on_preempt(r, 1.5)
+        r.generated = 0
+        sched.queues[r.client].appendleft(r)   # BatchCore.preempt requeues
+        r = sched.pop_next(2.0)
+        sched.on_admit(r, 2.0)
+    for _ in range(n_out):
+        sched.on_token(r, 3.0, 1)
+        produced += 1
+    r.generated = produced
+    sched.on_complete(r, 4.0, latency=1.0, tps=50.0, util=0.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8))
+def test_vtc_charges_identical_after_preempt_readmit(k):
+    plain, cycled = VTC(), VTC()
+    _drive(plain, _req(0, p=30, o=9))
+    _drive(cycled, _req(0, p=30, o=9), preempt_after=k)
+    assert cycled.counter["c"] == pytest.approx(plain.counter["c"])
+    assert cycled.service["c"] == pytest.approx(plain.service["c"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8))
+def test_equinox_charges_identical_modulo_tilt(k):
+    """With delta=0 the latency tilt is 1, so a preempt/readmit cycle
+    must leave UFC/RFC exactly equal to an uninterrupted run (the tilt
+    term is the only sanctioned difference)."""
+    from repro.core.counters import HFParams
+
+    class Pred:
+        def predict(self, req):
+            req.pred_output_len = 2.0
+            req.pred_latency = req.pred_tps = req.pred_util = 0.0
+
+        def observe(self, *a, **k):
+            pass
+
+    p = HFParams(delta=0.0, charging="incremental")
+    plain, cycled = Equinox(Pred(), params=p), Equinox(Pred(), params=p)
+    _drive(plain, _req(0, p=30, o=9))
+    _drive(cycled, _req(0, p=30, o=9), preempt_after=k)
+    assert cycled.ufc["c"] == pytest.approx(plain.ufc["c"])
+    assert cycled.rfc["c"] == pytest.approx(plain.rfc["c"])
+
+
+# -- shared pages survive preemption (satellite a) ----------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 3), st.integers(1, 16))
+def test_preemption_never_frees_pages_shared_with_live_request(
+        shared_pages, extra_pages, seed):
+    """Victim A published its prompt prefix; B adopted it.  Preempting A
+    must never return a page B still references to the free list."""
+    ps = 4
+    pool = PagePool(64, ps)
+    cache = PrefixCache(pool)
+    n_shared = shared_pages * ps
+    toks = np.arange(n_shared + extra_pages * ps + 3, dtype=np.int32)
+
+    a = _req(0, p=len(toks), o=4)
+    a.prompt_tokens = toks
+    pool.ensure(a.rid, len(toks))
+    a.prefill_done = a.prompt_len
+    cache.insert(a, 1.0)
+
+    b = _req(1, p=n_shared + 3, o=4)
+    b.prompt_tokens = toks[:b.prompt_len]
+    b.cached_prefix = cache.lookup(b, 2.0)
+    cache.attach(b, 2.0)
+    assert b.cached_prefix == min(shared_pages + extra_pages,
+                                  (b.prompt_len - 1) // ps) * ps
+
+    cm = CostModel(get_config("llama2-7b"), A100_80G)
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(kv_budget_tokens=1000),
+                     prefix_cache=cache)
+    core.reserved[a.rid] = 10
+    core.kv_used = 10
+    a.state = DECODING
+    core.preempt(a, 3.0)
+
+    for page in pool.owned.get(b.rid, []):
+        assert pool.refcount.get(page, 0) >= 1
+        assert page not in pool.free
+    # and the double-free guard still holds for the victim itself
+    assert a.rid not in pool.owned
+
+
+# -- budget invariant under random overload (satellite c) ---------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_no_admitted_batch_exceeds_budget_once_reconciled(seed):
+    rng = np.random.default_rng(seed)
+    cm = CostModel(get_config("llama2-7b"), A100_80G)
+    n = int(rng.integers(4, 12))
+    reqs = []
+    for i in range(n):
+        o = int(rng.integers(1, 60))
+        reqs.append(_req(i, client=f"c{i % 3}", arrival=0.0,
+                         p=int(rng.integers(5, 50)), o=o,
+                         pred=max(1, o // 5)))
+    budget = int(rng.integers(150, 400))
+    sim = Simulator(cm, make_scheduler("fcfs"),
+                    SimConfig(max_batch=int(rng.integers(3, 8)),
+                              kv_budget_tokens=budget,
+                              adaptive_batching=False))
+    for r in reqs:
+        sim.submit(r)
+    for _ in range(100_000):
+        if not sim.step():
+            break
+        # the reconciled invariant: over budget only when running solo
+        assert (sim.core.kv_used <= sim.core.kv_budget
+                or len(sim.running) <= 1)
+    assert all(r.state == "finished" for r in reqs)
+    assert all(r.generated == r.output_len for r in reqs)
+    assert sim.core.kv_used == 0 and not sim.core.reserved
+
+
+# -- sim/engine parity of preemption decisions --------------------------------
+def _preemption_trace(n=6, seed=5):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        o = int(rng.integers(30, 60))
+        reqs.append(_req(i, client=f"client{i % 2}", arrival=0.05 * i,
+                         p=16, o=o, pred=max(1.0, o / 5)))  # 5x under-pred
+    return reqs
+
+
+def test_parity_preemption_decisions_and_ttfts(cm):
+    """Acceptance invariant: with >=4x output under-prediction on a KV
+    budget the true footprints over-commit, the paged engine and the
+    simulator take IDENTICAL preemption decisions (victims, order) and
+    report identical TTFTs / e2e latencies — and the engine never hits
+    PagePool exhaustion."""
+    from repro.serving.engine import ServingEngine
+
+    espy = PreemptSpy()
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=4,
+                        max_len=64, kv_budget_tokens=192, cost_model=cm,
+                        backend="paged", page_size=16, chunked=True,
+                        prefill_chunk_tokens=16, observer=espy)
+    done = eng.run([dataclasses.replace(r) for r in _preemption_trace()])
+    assert len(done) == 6
+    assert all(r.generated == r.output_len for r in done)
+    assert eng.n_preemptions > 0          # pressure actually materialized
+
+    sspy = PreemptSpy()
+    sim = Simulator(cm, make_scheduler("fcfs"),
+                    SimConfig(max_batch=4, kv_budget_tokens=192,
+                              default_reserve=128, prefill_chunk=16,
+                              stall_free=True, adaptive_batching=True,
+                              kv_page_size=16),
+                    observer=sspy)
+    res = sim.run([dataclasses.replace(r) for r in _preemption_trace()])
+    assert all(r.state == "finished" for r in res.requests)
+
+    assert espy.preempts == sspy.preempts          # identical victims
+    assert espy.order == sspy.order                # identical admissions
+    assert espy.chunks == sspy.chunks              # identical chunk plans
+    assert sim.n_preemptions == eng.n_preemptions
+    e = {r.rid: r for r in done}
+    s = {r.rid: r for r in res.requests}
+    for rid in e:
+        assert e[rid].n_preempted == s[rid].n_preempted
+        assert e[rid].ttft() == pytest.approx(s[rid].ttft(), abs=1e-9)
+        assert e[rid].e2e_latency() == pytest.approx(
+            s[rid].e2e_latency(), abs=1e-9)
+
+
+def test_slots_backend_survives_pool_pressure(cm):
+    """The slots backend shares the same budget-driven preemption (its
+    per-slot caches cannot exhaust, but the shared KV budget can)."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    rng = np.random.default_rng(4)
+    reqs = []
+    for i in range(6):
+        o = int(rng.integers(25, 45))
+        reqs.append(_req(i, client=f"client{i % 2}", arrival=0.05 * i,
+                         p=16, o=o, pred=max(1.0, o / 5)))
+    eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=4,
+                        max_len=64, kv_budget_tokens=160, cost_model=cm,
+                        chunked=True, prefill_chunk_tokens=16)
+    done = eng.run(reqs)
+    assert len(done) == 6
+    assert all(r.generated == r.output_len for r in done)
+    assert eng.n_preemptions > 0
+
+
+def test_preempted_engine_generates_same_tokens_as_unpressured(cm):
+    """Preemption by recompute must not change model outputs: greedy
+    decode regenerates the identical token stream after re-admission."""
+    import jax
+
+    from repro.models import init_params
+    from repro.serving.engine import ServingEngine
+
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    params = init_params(jax.random.key(7), cfg)
+    toks = {}
+    for budget in (2000, 192):            # roomy vs preemption-inducing
+        eng = ServingEngine(cfg, make_scheduler("fcfs"), params=params,
+                            max_slots=4, max_len=64,
+                            kv_budget_tokens=budget, cost_model=cm,
+                            backend="paged", page_size=16, chunked=True,
+                            prefill_chunk_tokens=16)
+        done = eng.run([dataclasses.replace(r)
+                        for r in _preemption_trace()])
+        assert len(done) == 6
+        toks[budget] = {r.rid: r._next_token for r in done}
+    assert toks[2000] == toks[192]
+
+
+# -- satellite: cache-hit reservations ----------------------------------------
+def test_reserve_amount_discounts_cached_prefix(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(kv_budget_tokens=1000, kv_page_size=16))
+    r = _req(0, p=64, o=20, pred=10)
+    assert core.reserve_amount(r) == 80            # ceil(74 / 16) pages
+    r.cached_prefix = 32                           # adopted, already resident
+    assert core.reserve_amount(r) == 48            # ceil(42 / 16) pages
+
+
+def test_kv_used_tracks_pool_pages_with_cache_on(cm):
+    """With the prefix cache on, the token-budget accounting must bound
+    the physical pool: live pages never exceed the page-rounded
+    reservations plus the cache-pinned pages."""
+    from repro.serving.engine import ServingEngine
+    from repro.workloads.vocab import prompt_token_ids
+
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    sys_toks = prompt_token_ids(("system", "sys0"), 32, seed=10_000)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(8):
+        plen = int(rng.integers(40, 60))
+        toks = np.concatenate([sys_toks,
+                               prompt_token_ids(("chat",), plen - 32,
+                                                seed=i)])
+        r = _req(i, client=f"client{i % 2}", arrival=0.2 * i, p=plen,
+                 o=int(rng.integers(4, 10)))
+        r.prompt_tokens = toks
+        reqs.append(r)
+    eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=4,
+                        max_len=96, kv_budget_tokens=2000, cost_model=cm,
+                        backend="paged", page_size=16, chunked=True,
+                        prefill_chunk_tokens=16, prefix_cache=True)
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    pi = 0
+    ps = eng.pool.page_size
+    for _ in range(10_000):
+        while pi < len(pending) and pending[pi].arrival <= eng.now():
+            eng.submit(pending[pi])
+            pi += 1
+        n = eng.step()
+        assert (eng.pool.used_pages
+                <= eng.core.kv_used // ps + len(eng.pool.cached))
+        if n == 0:
+            if pi >= len(pending):
+                break
+            eng.t_model = max(eng.t_model, pending[pi].arrival)
+    assert len(eng.finished) == 8
+    assert sum(r.cached_prefix for r in eng.finished) > 0   # hits happened
+
+
+def test_kv_headroom_deducts_pinned_adopted_pages(cm):
+    """The satellite-1 discount leaves adopted pinned pages charged to
+    no reservation; the budget check must shrink by them or the token
+    accounting can over-commit the physical pool (they are resident and
+    unreclaimable while the adopter lives)."""
+    ps = 16
+    pool = PagePool(20, ps)                 # 320-token pool
+    cache = PrefixCache(pool)
+    toks = np.arange(160, dtype=np.int32)
+
+    a = _req(0, p=160, o=4)
+    a.prompt_tokens = toks
+    pool.ensure(a.rid, 160)
+    cache.insert(a, 1.0)
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(kv_budget_tokens=320, kv_page_size=ps),
+                     prefix_cache=cache)
+    # while the inserting request is live, its reservation covers the
+    # cached pages — no deduction
+    assert pool.pinned_unaccounted_pages() == 0
+    assert core.kv_headroom() == 320
+    pool.free_request(a.rid)                # A completes; pages stay warm
+    assert core.kv_headroom() == 320        # refcount 0: evictable, free
+
+    b = _req(1, p=160, o=4)
+    b.prompt_tokens = toks
+    b.cached_prefix = cache.lookup(b, 2.0)  # 9 pages (last token recomputed)
+    cache.attach(b, 2.0)
+    assert b.cached_prefix == 144
+    # 9 adopted pinned pages are now resident but charged nowhere
+    assert pool.pinned_unaccounted_pages() == 9
+    assert core.kv_headroom() == 320 - 9 * ps
+    pool.free_request(b.rid)
+    assert pool.pinned_unaccounted_pages() == 0
+    assert core.kv_headroom() == 320
+
+
+# -- satellite: TPS billing excludes cached prompt tokens ---------------------
+def test_complete_tps_excludes_cached_prefix(cm):
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(kv_budget_tokens=1000))
+    r = _req(0, p=64, o=10)
+    r.cached_prefix = 32
+    r.admit_time = 0.0
+    r.generated = 10
+    exec_lat, tps, util = core.complete(r, 2.0)
+    assert exec_lat == pytest.approx(2.0)
+    assert tps == pytest.approx(((64 - 32) + 10) / 2.0)   # §3.2: computed
+    assert util == pytest.approx(cm.mfu(42, 2.0))
+
+
+# -- satellite: returning-client lift over active clients only ----------------
+def test_vtc_lift_ignores_stale_idle_clients():
+    s = VTC()
+    # a: active (queued); b: long idle with a stale-low counter
+    s.on_arrival(_req(0, "a", 0.0, p=50), 0.0)
+    s.counter["a"] = 1000.0
+    s.arrived_clients.add("b")
+    s.counter["b"] = 10.0
+    s.on_arrival(_req(1, "late", 100.0), 100.0)
+    assert s.counter["late"] == 1000.0       # b's stale 10 is ignored
+
+
+def test_vtc_returning_idle_client_is_relifted():
+    """A client that drained and went idle must be re-lifted on return —
+    idle time banks no credit (the no-gaming rule, now applied to
+    *returning* clients, not just first arrivals)."""
+    s = VTC()
+    s.on_arrival(_req(0, "a", 0.0, p=50), 0.0)
+    r = s.pop_next(0.0)
+    s.on_admit(r, 0.0)
+    s.on_complete(r, 1.0, latency=1.0, tps=1.0, util=1.0)
+    s.counter["a"] = 5.0                     # idle with a stale-low counter
+    s.on_arrival(_req(1, "b", 1.0, p=50), 1.0)
+    s.counter["b"] = 800.0
+    s.on_arrival(_req(2, "a", 50.0), 50.0)   # a returns after idling
+    assert s.counter["a"] == 800.0
+
+
+def test_equinox_lift_ignores_stale_idle_clients():
+    class Pred:
+        def predict(self, req):
+            req.pred_output_len = 1.0
+
+        def observe(self, *a, **k):
+            pass
+
+    s = Equinox(Pred())
+    s.on_arrival(_req(0, "a", 0.0), 0.0)
+    s.ufc["a"] = 900.0
+    s.rfc["a"] = 90.0
+    s.arrived_clients.add("idle")
+    s.ufc["idle"] = 1.0
+    s.rfc["idle"] = 0.5
+    s.on_arrival(_req(1, "new", 10.0), 10.0)
+    assert s.ufc["new"] == 900.0 and s.rfc["new"] == 90.0
+
+
+def test_lift_not_applied_when_backlogged_on_peer_replica():
+    """Cluster rule: a client actively queued on another replica is not
+    idle — its next arrival (wherever routed) must NOT trigger the
+    returning-client lift, or it would be lifted away from the priority
+    its backlog earned."""
+    from repro.serving.cluster import share_fairness_state
+
+    rep_a, rep_b = VTC(), VTC()
+    share_fairness_state([rep_a, rep_b])
+    rep_b.on_arrival(_req(0, "c", 0.0), 0.0)     # c backlogged on B
+    rep_a.on_arrival(_req(1, "rich", 0.0), 0.0)
+    rep_a.counter["rich"] = 500.0
+    rep_a.counter["c"] = 5.0                     # earned-low shared counter
+    rep_a.on_arrival(_req(2, "c", 1.0), 1.0)     # routed to A this time
+    assert rep_a.counter["c"] == 5.0             # no lift: still active
+    # drain c everywhere -> now it IS idle, and the next arrival lifts
+    rep_b.queues["c"].clear()
+    rep_a.queues["c"].clear()
+    rep_a.on_arrival(_req(3, "c", 2.0), 2.0)
+    assert rep_a.counter["c"] == 500.0
+
+
+def test_active_clients_counts_inflight_work():
+    s = VTC()
+    s.on_arrival(_req(0, "a", 0.0), 0.0)
+    r = s.pop_next(0.0)
+    s.on_admit(r, 0.0)                       # queue empty, but running
+    assert s.active_clients() == {"a"}
+    s.on_complete(r, 1.0, latency=1.0, tps=1.0, util=1.0)
+    assert s.active_clients() == set()
