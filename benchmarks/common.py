@@ -24,13 +24,27 @@ def _train_corpus(seed=0):
     return tuple(corpus(TRAIN_CORPUS_N, seed=seed))
 
 
-def predictor(kind: str, seed=0, epochs=20):
+@functools.lru_cache(maxsize=None)
+def _trained_predictor(kind: str, seed=0, epochs=20):
     if kind == "oracle":
         return Oracle(CM)
     if kind == "single":
         return SingleProxy(CM, list(_train_corpus(seed)), epochs=epochs,
                            seed=seed)
     return MoPE(CM, list(_train_corpus(seed)), epochs=epochs, seed=seed)
+
+
+def predictor(kind: str, seed=0, epochs=20):
+    """Fresh predictor per call, memoised *training*.
+
+    Serving mutates predictor state (the bias EMA, the metric map), so
+    handing every ``run_sim`` the same cached instance leaked one run's
+    recalibration into the next — re-running the same benchmark in one
+    process gave different numbers (the hidden-state leak class
+    ``tests/test_bench_determinism.py`` exists to catch).  Training is
+    the expensive part; deep-copying the trained prototype keeps runs
+    independent without retraining."""
+    return copy.deepcopy(_trained_predictor(kind, seed, epochs))
 
 
 def run_sim(sched_name: str, wl, *, pred_kind=None, simcfg=None,

@@ -1,0 +1,188 @@
+"""Locality-aware fair scheduling duel: DLPM vs Equinox vs VTC
+(DESIGN.md §11).
+
+Serves one saturated multi-turn ShareGPT-like trace (the DESIGN.md §9
+workload: conversations extend their own history, system prompts shared
+across clients) through three policies on a single cache-pressured
+replica, plus a 4-replica routing duel:
+
+- ``vtc``         — locality-blind smallest-counter baseline;
+- ``equinox``     — default argmin-HF (locality-blind; the paper's
+                    operating point);
+- ``equinox_lb``  — Equinox with ``locality_bonus=0.15`` (reference row:
+                    how much of the gap the HF tilt alone recovers);
+- ``dlpm``        — Deficit Longest-Prefix-Match (default quantum);
+- routing duel    — DLPM replicas with cluster-global deficit counters,
+                    ``d2lpm`` vs ``prefix_affinity`` vs ``least_kv``:
+                    KV reuse is replica-local, so the router must follow
+                    the pages, but only above the D²LPM match threshold.
+
+Reports token-level cache hit rate, p50/p99 TTFT, modeled throughput,
+preemption count, and Jain's index over per-client *delivered* weighted
+tokens (prefilled + 4·generated — policy-independent yardstick, measured
+over a fixed saturated horizon so under-served clients actually show).
+
+Gates (CI ``--smoke``): DLPM must beat default Equinox on cache hit rate
+AND p50 TTFT at an equal-or-better Jain's index, and ``d2lpm`` routing
+must beat ``least_kv``'s cluster hit rate.
+
+    PYTHONPATH=src python benchmarks/locality_fairness.py [--smoke]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SimConfig, Simulator, make_scheduler
+from repro.predictor import Oracle
+from repro.serving.cluster import make_sim_cluster
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import multiturn_sharegpt_like
+
+CM = CostModel(get_config("llama2-7b"), A100_80G)
+
+FULL = dict(n_clients=24, think_time=2.0, max_batch=6, kv_budget=16_000,
+            horizon=90.0, n_replicas=4, replica_kv=10_000,
+            cluster_max_batch=4, cluster_horizon=60.0, seed=11)
+SMOKE = dict(n_clients=12, think_time=2.0, max_batch=6, kv_budget=16_000,
+             horizon=50.0, n_replicas=3, replica_kv=8_000,
+             cluster_max_batch=4, cluster_horizon=40.0, seed=3)
+
+ARMS = (("vtc", {}),
+        ("equinox", {}),
+        ("equinox_lb", dict(locality_bonus=0.15)),
+        ("dlpm", {}))
+
+
+def _trace(p):
+    return multiturn_sharegpt_like(n_clients=p["n_clients"],
+                                   n_conversations=2,
+                                   think_time=p["think_time"],
+                                   seed=p["seed"])
+
+
+def _metrics(requests, sim_time, hit_rate, n_preempt):
+    ttfts = np.array([r.ttft() for r in requests if r.ttft() is not None])
+    thr = sum(r.prompt_len + r.generated for r in requests
+              if r.state == "finished") / max(sim_time, 1e-9)
+    # delivered weighted tokens per client: the policy-independent
+    # fairness yardstick (scheduler counters differ in units across
+    # policies; what a client actually received does not)
+    # every client in the trace counts, served or not: a policy that
+    # fully starves a client must see its Jain *drop*, not have the
+    # victim silently excluded from the index
+    served = {r.client: 0.0 for r in requests}
+    for r in requests:
+        served[r.client] += (min(r.prefill_done, r.prompt_len)
+                             + 4.0 * r.generated)
+    xs = np.array(list(served.values()))
+    sq = float(np.sum(xs ** 2))
+    jain = float(xs.sum() ** 2 / (len(xs) * sq)) if sq > 0 else 1.0
+    return dict(p50=float(np.percentile(ttfts, 50)) if len(ttfts) else -1.0,
+                p99=float(np.percentile(ttfts, 99)) if len(ttfts) else -1.0,
+                thr=float(thr), jain=jain, hit=hit_rate,
+                pre=n_preempt,
+                n=sum(r.state == "finished" for r in requests))
+
+
+def _serve_single(p, reqs, arm: str, kw: dict):
+    name = "equinox" if arm.startswith("equinox") else arm
+    sched = make_scheduler(name, predictor=Oracle(CM), **kw)
+    sim = Simulator(CM, sched,
+                    SimConfig(max_batch=p["max_batch"],
+                              kv_budget_tokens=p["kv_budget"],
+                              prefix_cache=True))
+    t0 = time.monotonic()
+    res = sim.run([dataclasses.replace(r) for r in reqs],
+                  max_time=p["horizon"])
+    wall = time.monotonic() - t0
+    m = _metrics(res.requests, res.sim_time,
+                 sim.core.prefix_cache.stats.hit_rate(),
+                 sim.core.n_preemptions)
+    return m, wall
+
+
+def _serve_cluster(p, reqs, policy: str):
+    cl = make_sim_cluster(p["n_replicas"], CM, scheduler="dlpm",
+                          predictor=Oracle(CM), policy=policy,
+                          sim_cfg=SimConfig(max_batch=p["cluster_max_batch"],
+                                            kv_budget_tokens=p["replica_kv"],
+                                            prefix_cache=True))
+    t0 = time.monotonic()
+    res = cl.run([dataclasses.replace(r) for r in reqs],
+                 max_time=p["cluster_horizon"])
+    wall = time.monotonic() - t0
+    m = _metrics(res.requests, res.sim_time, res.cache_hit_rate() or 0.0,
+                 sum(res.replica_preemptions()))
+    return m, wall
+
+
+def run(quick: bool = False):
+    p = SMOKE if quick else FULL
+    reqs = _trace(p)
+    out = []
+
+    single = {}
+    for arm, kw in ARMS:
+        m, wall = _serve_single(p, reqs, arm, kw)
+        single[arm] = m
+        out.append(f"locality_fairness/{arm},{wall * 1e6:.0f},"
+                   f"served={m['n']} hit={m['hit']:.3f} "
+                   f"p50ttft={m['p50']:.4f}s p99ttft={m['p99']:.4f}s "
+                   f"thr={m['thr']:.0f}tok/s jain={m['jain']:.3f} "
+                   f"preempts={m['pre']}")
+
+    routed = {}
+    for policy in ("least_kv", "prefix_affinity", "d2lpm"):
+        m, wall = _serve_cluster(p, reqs, policy)
+        routed[policy] = m
+        out.append(f"locality_fairness/route_{policy},{wall * 1e6:.0f},"
+                   f"served={m['n']} hit={m['hit']:.3f} "
+                   f"p50ttft={m['p50']:.4f}s thr={m['thr']:.0f}tok/s "
+                   f"jain={m['jain']:.3f}")
+
+    dlpm, eqx = single["dlpm"], single["equinox"]
+    hit_win = dlpm["hit"] - eqx["hit"]
+    p50_win = 1.0 - dlpm["p50"] / max(eqx["p50"], 1e-12)
+    jain_ok = dlpm["jain"] >= eqx["jain"] - 1e-3
+    route_win = routed["d2lpm"]["hit"] - routed["least_kv"]["hit"]
+    ok = hit_win > 0 and p50_win > 0 and jain_ok and route_win > 0
+    out.append(f"locality_fairness/summary,0,"
+               f"hit_dlpm={dlpm['hit']:.3f} hit_eqx={eqx['hit']:.3f} "
+               f"p50_reduction={p50_win * 100:.1f}% "
+               f"jain_dlpm={dlpm['jain']:.3f} jain_eqx={eqx['jain']:.3f} "
+               f"d2lpm_hit={routed['d2lpm']['hit']:.3f} "
+               f"least_kv_hit={routed['least_kv']['hit']:.3f} "
+               f"ok={ok}")
+    return out
+
+
+def main():
+    import argparse
+
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import write_bench_json
+    except ImportError:                    # python benchmarks/...py
+        from common import write_bench_json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI (<1 min)")
+    args = ap.parse_args()
+    lines = run(quick=args.smoke)
+    for line in lines:
+        print(line, flush=True)
+    write_bench_json("locality_fairness", lines, {"smoke": args.smoke})
+    ok = lines[-1].rsplit("ok=", 1)[-1] == "True"
+    if not ok:
+        raise SystemExit(
+            "locality_fairness failed its gates: DLPM must beat default "
+            "Equinox on cache hit rate and p50 TTFT at equal-or-better "
+            "Jain, and d2lpm routing must beat least_kv's hit rate")
+
+
+if __name__ == "__main__":
+    main()

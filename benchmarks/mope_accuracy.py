@@ -58,5 +58,10 @@ def run(quick=False):
     for r in reqs:
         m3.router.classify(r.keywords, r.prompt_len)
     dt = (time.monotonic() - t0) / len(reqs)
-    out.append(row("mope_acc/router_overhead", dt, f"{dt * 1e3:.3f}ms/prompt"))
+    # the measured per-prompt latency lives in the us_per_call column
+    # (understood to be wall time and normalized away by the
+    # determinism pin) — embedding it in the derived field leaked wall
+    # clock into the perf trajectory (tests/test_bench_determinism.py)
+    out.append(row("mope_acc/router_overhead", dt,
+                   f"paper_ref=0.02ms/prompt n={len(reqs)}"))
     return out

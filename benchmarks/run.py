@@ -32,6 +32,8 @@ BENCHES = [
                      "prefix-affinity routing on a multiturn trace"),
     ("overload", "DESIGN.md §10: preemption under output-length "
                  "misprediction; fair vs LIFO victim selection"),
+    ("locality_fairness", "DESIGN.md §11: DLPM vs Equinox vs VTC duel + "
+                          "d2lpm routing on the multiturn trace"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),

@@ -7,13 +7,13 @@ from repro.core.counters import (DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DELTA,
 from repro.core.metrics import (HFObserver, jain, service_difference_stats,
                                 summarize)
 from repro.core.request import Request
-from repro.core.schedulers import (FCFS, RPM, VTC, Equinox, SchedulerBase,
-                                   make_scheduler)
+from repro.core.schedulers import (DLPM, FCFS, RPM, VTC, Equinox,
+                                   SchedulerBase, make_scheduler)
 from repro.core.simulator import SimConfig, SimResult, Simulator
 
 __all__ = ["DEFAULT_ALPHA", "DEFAULT_BETA", "DEFAULT_DELTA",
            "OUT_TOKEN_WEIGHT", "HFParams", "hf_scores", "rfc_increment",
            "select_min_hf", "ufc_increment", "HFObserver", "jain",
-           "service_difference_stats", "summarize", "Request", "FCFS",
-           "RPM", "VTC", "Equinox", "SchedulerBase", "make_scheduler",
-           "SimConfig", "SimResult", "Simulator"]
+           "service_difference_stats", "summarize", "Request", "DLPM",
+           "FCFS", "RPM", "VTC", "Equinox", "SchedulerBase",
+           "make_scheduler", "SimConfig", "SimResult", "Simulator"]

@@ -175,3 +175,9 @@ class HFParams:
     # served from the shared-prefix KV cache.  1.0 = cache-blind (paper);
     # 0.0 = cached tokens free.
     omega_cached: float = 1.0
+    # Locality tilt (DESIGN.md §11): HF headroom a fully cached prefix
+    # may override in ``Equinox.pop_next`` — the effective score is
+    # HF_c − locality_bonus · (cached_prefix / prompt_len) of the head
+    # request.  HF is normalized to ~[0, 1], so 0.05–0.2 is a mild-to-
+    # strong preference; 0.0 (default) is the paper's exact argmin-HF.
+    locality_bonus: float = 0.0

@@ -1,4 +1,4 @@
-"""Scheduling policies behind one protocol: FCFS, RPM, VTC, Equinox.
+"""Scheduling policies behind one protocol: FCFS, RPM, VTC, Equinox, DLPM.
 
 Protocol (driven by the simulator and the serving engine):
     on_arrival(req, now)      request entered the queue
@@ -48,6 +48,12 @@ class SchedulerBase:
     # pick the worst-counter client's youngest request; "lifo" forces the
     # policy-blind youngest-request baseline everywhere.
     victim_policy: str = "fair"
+    # Locality probe (DESIGN.md §11): a side-effect-free callable
+    # ``req -> cached-prefix match length in tokens``, threaded in by
+    # ``BatchCore`` when a prefix cache is attached.  None (no cache)
+    # means every request scores 0 and locality-aware policies (DLPM,
+    # Equinox+locality_bonus) degrade to their cache-blind order.
+    locality_probe = None
 
     def __init__(self):
         self.queues: Dict[str, collections.deque] = collections.defaultdict(
@@ -119,6 +125,16 @@ class SchedulerBase:
             if s.queues.get(client):
                 return True
         return False
+
+    def head_locality(self, client: str) -> int:
+        """Cached-prefix match length (tokens) of ``client``'s head
+        request — the LPM score of DLPM / D²LPM (DESIGN.md §11).  Probes
+        via ``locality_probe`` (side-effect-free: ordering candidates
+        must not distort the cache's LRU order); 0 without a cache."""
+        q = self.queues.get(client)
+        if not q or self.locality_probe is None:
+            return 0
+        return self.locality_probe(q[0])
 
     # -- service accounting ----------------------------------------------------
     def on_admit(self, req: Request, now: float):
@@ -336,6 +352,78 @@ class VTC(SchedulerBase):
         return dict(self.counter)
 
 
+class DLPM(VTC):
+    """Deficit Longest-Prefix-Match (Locality-aware Fair Scheduling,
+    Cao et al., arXiv:2501.14312; DESIGN.md §11).
+
+    VTC's per-client counters double as *deficit* counters.  Each
+    ``pop_next`` builds the fairness-feasible set — every queued client
+    whose counter is within ``quantum`` weighted tokens of the
+    least-served candidate — and, inside that set, admits the client
+    whose head request has the longest cached-prefix match (the
+    side-effect-free probe ``BatchCore`` threads in when a prefix cache
+    is attached).  Ties fall back to the smallest counter, i.e. plain
+    VTC, which is also the exact behavior without a cache.
+
+    ``quantum`` is the locality-vs-fairness bound: locality can advance
+    a warm client at most ``quantum`` weighted tokens past the coldest
+    backlogged client before that client becomes the only feasible pick,
+    so the pairwise backlogged service gap stays <= quantum + one
+    maximal request (the DLPM analogue of VTC's 2·max-request bound).
+
+    Deficits are charged through ``billable_input`` exactly like VTC's
+    counters — the uncached suffix at full weight, the cached prefix at
+    ``omega_cached`` (default 1.0: deficit accounting stays paper-
+    consistent and cache-blind, so locality changes *order*, never what
+    a request costs its client).  Lowering ``omega_cached`` additionally
+    lets cache hits consume less of a client's quantum — the
+    actually-computed-tokens accounting of the locality paper's cost
+    function (see DESIGN.md §9 for why 0 invites self-history farming).
+    """
+    name = "dlpm"
+
+    def __init__(self, predictor=None, quantum: float = 512.0,
+                 out_weight: float = C.OUT_TOKEN_WEIGHT):
+        if quantum <= 0:
+            raise ValueError(f"DLPM quantum must be > 0, got {quantum}")
+        super().__init__(predictor=predictor, out_weight=out_weight)
+        self.quantum = float(quantum)
+
+    def pop_next(self, now, exclude=None):
+        cands = self.queued_clients()
+        if exclude:
+            cands = [c for c in cands if c not in exclude]
+        if not cands:
+            return None
+        floor = min(self.counter[c] for c in cands)
+        feasible = [c for c in cands
+                    if self.counter[c] <= floor + self.quantum]
+        # longest cached prefix wins; ties (incl. the cache-less case,
+        # where every score is 0) revert to smallest-counter VTC order —
+        # min() keeps the first minimal candidate in queue-dict insertion
+        # order, exactly like VTC.pop_next, so quantum→0 and probe-less
+        # DLPM are bit-identical to VTC down to exact-counter ties
+        c = min(feasible,
+                key=lambda c: (-self.head_locality(c), self.counter[c]))
+        return self.queues[c].popleft()
+
+    def select_victim(self, running, now):
+        """Prefer evicting the *lowest-locality* request (DESIGN.md §11)
+        of the largest-counter client: a high-locality victim's pages
+        are mostly shared and pinned in the radix tree, so evicting it
+        frees little memory while discarding exactly the admission the
+        LPM order prioritized; the lowest-locality request holds the
+        most private, actually-reclaimable pages.  Ties (same cached
+        prefix) preempt the youngest, as everywhere else."""
+        if not running or self.victim_policy != "fair":
+            return super(VTC, self).select_victim(running, now)
+        worst = max({r.client for r in running},
+                    key=lambda c: (self.counter.get(c, 0.0), c))
+        mine = [r for r in running if r.client == worst]
+        low = min(r.cached_prefix for r in mine)
+        return self._youngest([r for r in mine if r.cached_prefix == low])
+
+
 class Equinox(SchedulerBase):
     """Holistic fair scheduling (paper Algorithm 1).
 
@@ -391,7 +479,19 @@ class Equinox(SchedulerBase):
         if not cands:
             return None
         hf = self._hf()
-        c = min(cands, key=lambda c: hf[c])
+        bonus = getattr(self.p, "locality_bonus", 0.0)
+        if bonus and self.locality_probe is not None:
+            # locality-tilted HF (DESIGN.md §11): a cached prefix lowers
+            # the effective score by up to ``locality_bonus`` (HF is
+            # normalized to ~[0, 1], so the bonus is directly the HF
+            # headroom locality may override).  bonus=0 is paper-exact.
+            def eff(c):
+                frac = (self.head_locality(c)
+                        / max(self.queues[c][0].prompt_len, 1))
+                return hf[c] - bonus * frac
+            c = min(cands, key=eff)
+        else:
+            c = min(cands, key=lambda c: hf[c])
         req = self.queues[c][0]
         if req.pred_output_len is None:
             self.predictor.predict(req)       # Algorithm 1 lines 4-5
@@ -477,26 +577,56 @@ class Equinox(SchedulerBase):
         return self._hf()
 
 
+SCHEDULERS = ("fcfs", "rpm", "vtc", "equinox", "dlpm")
+
+
 def make_scheduler(name: str, predictor=None, omega_cached: float = None,
-                   victim_policy: str = None, **kw):
+                   victim_policy: str = None, locality_bonus: float = None,
+                   **kw):
+    """Construct a scheduling policy by name.
+
+    All user-input validation raises ``ValueError`` (never ``assert`` —
+    asserts vanish under ``python -O``, silently accepting a typo'd
+    ``victim_policy`` and running the wrong preemption policy)."""
     name = name.lower()
+    if name not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler {name!r}; "
+                         f"choose from {SCHEDULERS}")
+    if locality_bonus is not None:
+        if name != "equinox":
+            raise ValueError("locality_bonus is an Equinox knob (DLPM is "
+                             f"locality-first by construction); got {name!r}")
+        if not 0.0 <= locality_bonus <= 1.0:
+            raise ValueError(f"locality_bonus must be in [0, 1] (it is HF "
+                             f"headroom), got {locality_bonus}")
     if name == "fcfs":
         sched = FCFS()
     elif name == "rpm":
         sched = RPM(**kw)
     elif name == "vtc":
         sched = VTC(predictor=predictor, **kw)
-    elif name == "equinox":
-        assert predictor is not None, "Equinox requires a predictor"
-        if omega_cached is not None and "params" not in kw:
-            kw["params"] = dataclasses.replace(C.HFParams(),
-                                               omega_cached=omega_cached)
-        sched = Equinox(predictor, **kw)
+    elif name == "dlpm":
+        sched = DLPM(predictor=predictor, **kw)
     else:
-        raise ValueError(name)
+        if predictor is None:
+            raise ValueError("Equinox requires a predictor (its HF "
+                             "counters price predicted latency/TPS/util)")
+        if omega_cached is not None or locality_bonus is not None:
+            kw["params"] = dataclasses.replace(
+                kw.get("params", C.HFParams()),
+                **({} if omega_cached is None
+                   else {"omega_cached": omega_cached}),
+                **({} if locality_bonus is None
+                   else {"locality_bonus": locality_bonus}))
+        sched = Equinox(predictor, **kw)
     if omega_cached is not None:
+        if not 0.0 <= omega_cached <= 1.0:
+            raise ValueError(f"omega_cached must be in [0, 1], got "
+                             f"{omega_cached}")
         sched.omega_cached = omega_cached
     if victim_policy is not None:
-        assert victim_policy in ("fair", "lifo"), victim_policy
+        if victim_policy not in ("fair", "lifo"):
+            raise ValueError(f"victim_policy must be 'fair' or 'lifo', "
+                             f"got {victim_policy!r}")
         sched.victim_policy = victim_policy
     return sched

@@ -210,6 +210,20 @@ class Simulator:
         plan = self.core.plan_prefill(self.running)
         prefill_tokens = sum(c for _, c in plan)
         decoding = [r for r in self.running if r.state == DECODING]
+        if self.core.prefix_cache is not None:
+            # mirror the engine's physical allocation schedule (pages per
+            # prefill chunk, one decode row per iteration) on the host
+            # pool: under pool pressure, *when* pages are allocated
+            # decides *which* warm pages LRU eviction reclaims, and the
+            # radix trees of the two frontends must evolve identically
+            # (tests/test_parity_matrix.py pins this with the cache on)
+            for r, _chunk in plan:
+                self.pool.ensure(r.rid, r.prefill_done)
+            for r in decoding:
+                # this iteration's decode writes KV row prompt+generated-1
+                # (generated counts the prefill-emitted first token), so
+                # coverage through prompt+generated tokens is needed
+                self.pool.ensure(r.rid, r.prompt_len + r.generated)
         ctxs = [r.prompt_len + r.generated for r in decoding]
         fresh = bool(admitted) or bool(preempted) or not self.running
         t_iter = self.core.iteration_time(plan, ctxs, fresh)

@@ -85,6 +85,7 @@ class BatchCore:
         self.cfg = cfg or BatchConfig()
         self.observer = observer
         self.prefix_cache = prefix_cache      # repro.serving.prefix_cache
+        #   (property: also threads the locality probe into the scheduler)
         self.kv_budget = (self.cfg.kv_budget_tokens
                           or cost_model.kv_budget_tokens())
         self.kv_used = 0
@@ -92,6 +93,37 @@ class BatchCore:
         self.kv_page = max(getattr(self.cfg, "kv_page_size", 1) or 1, 1)
         self.n_preemptions = 0          # preemption events on this replica
         self.blocked_client = None      # set by try_admit on canSchedule fail
+
+    # -- locality probe threading (DESIGN.md §11) ----------------------------
+    @property
+    def prefix_cache(self):
+        return self._prefix_cache
+
+    @prefix_cache.setter
+    def prefix_cache(self, cache):
+        """Attaching a prefix cache (at construction, or late — the
+        engine wires its pool-backed cache after ``BatchCore.__init__``)
+        also hands the scheduler a side-effect-free locality probe, so
+        DLPM's LPM ordering and Equinox's ``locality_bonus`` see the
+        same radix tree admission adopts from."""
+        self._prefix_cache = cache
+        self.sched.locality_probe = (self.probe_cached_prefix
+                                     if cache is not None else None)
+
+    def probe_cached_prefix(self, req: Request) -> int:
+        """Side-effect-free LPM score of a queued request: the
+        page-aligned cached prefix admission would adopt *right now*,
+        under the same cap rule as ``PrefixCache.lookup`` (the prompt's
+        last token is always recomputed).  Must not touch LRU stamps —
+        scoring every feasible candidate would otherwise distort
+        eviction order toward whoever queues the most."""
+        cache = self._prefix_cache
+        toks = req.prompt_tokens
+        if cache is None or toks is None or req.prompt_len <= 1:
+            return 0
+        m = cache.match_len(toks[:req.prompt_len])
+        cap = (req.prompt_len - 1) // cache.page_size * cache.page_size
+        return min(m, cap)
 
     def _round_kv(self, tokens: int) -> int:
         """Round a KV footprint up to the accounting granularity."""

@@ -28,11 +28,15 @@ problem:
   replica's admission loop.  Provided: ``round_robin``,
   ``least_kv`` (lowest KV-budget utilisation), ``min_ttft`` (lowest
   predicted time-to-first-token from the replica's clock, queue backlog
-  and roofline prefill cost), and ``prefix_affinity`` (DESIGN.md §9:
+  and roofline prefill cost), ``prefix_affinity`` (DESIGN.md §9:
   route to the replica whose shared-prefix radix cache holds the longest
   match for this prompt — KV reuse is replica-local, so conversation
   turns must land where their history's pages live; falls back to
-  ``least_kv`` on a cold prompt).
+  ``least_kv`` on a cold prompt), and ``d2lpm`` (DESIGN.md §11: the
+  distributed half of Deficit Longest-Prefix-Match — prefix-affinity
+  probe with a minimum-match threshold below which it load-balances via
+  ``least_kv``, paired with DLPM replica schedulers whose deficit
+  counters are cluster-global).
 
 The cluster event loop is a discrete-event merge: requests are routed
 when the *minimum* replica clock passes their arrival, and the
@@ -111,6 +115,52 @@ def route_min_ttft(cluster: "Cluster", req: Request) -> int:
     return int(min(range(len(cluster.replicas)), key=lambda i: (score(i), i)))
 
 
+def _best_prefix_replica(cluster: "Cluster", req: Request):
+    """(replica index, match length in tokens) of the longest cached
+    prefix for ``req`` across the cluster — the shared side-effect-free
+    probe behind ``prefix_affinity`` and ``d2lpm`` (one implementation,
+    so cap/tie-break rules cannot drift between the two policies).
+    (-1, 0) when no replica holds a match or the request has no tokens."""
+    toks = req.prompt_tokens
+    if toks is None or req.prompt_len <= 0:
+        return -1, 0
+    best_i, best_len = -1, 0
+    for i, rep in enumerate(cluster.replicas):
+        m = rep.core.prefix_match_len(toks)
+        if m > best_len:
+            best_i, best_len = i, m
+    return best_i, best_len
+
+
+# D²LPM fallback threshold (DESIGN.md §11): the affinity pick only wins
+# when the best replica's cached match covers at least this fraction of
+# the prompt — a sliver of locality doesn't justify skipping load
+# balancing.  Override per cluster by setting ``cluster.d2lpm_min_match``.
+D2LPM_MIN_MATCH = 0.125
+
+
+def route_d2lpm(cluster: "Cluster", req: Request) -> int:
+    """D²LPM — the router half of distributed Deficit Longest-Prefix-Match
+    (Cao et al., arXiv:2501.14312; DESIGN.md §11).  Each replica's radix
+    tree is probed side-effect-free (``BatchCore.prefix_match_len``) and
+    the request follows the longest cached prefix, *provided* the match
+    covers at least ``d2lpm_min_match`` of the prompt; colder prompts
+    fall back to ``least_kv`` so locality never degrades load balancing.
+
+    Fairness is deliberately not the router's job: run DLPM schedulers
+    on the replicas with ``share_counters=True`` and the deficit
+    counters are cluster-global (``share_fairness_state`` re-binds
+    DLPM's ``counter`` table), so every replica's quantum-bounded
+    admission sees the client's whole-cluster consumption no matter
+    where its requests land — spraying turns across replicas cannot
+    dodge the deficit bound, it only loses locality."""
+    best_i, best_len = _best_prefix_replica(cluster, req)
+    thresh = getattr(cluster, "d2lpm_min_match", D2LPM_MIN_MATCH)
+    if best_len < max(thresh * req.prompt_len, 1.0):
+        return route_least_kv(cluster, req)
+    return best_i
+
+
 def route_prefix_affinity(cluster: "Cluster", req: Request) -> int:
     """Longest cached-prefix match wins (DESIGN.md §9): each replica's
     radix tree is probed side-effect-free (``BatchCore.prefix_match_len``
@@ -118,14 +168,7 @@ def route_prefix_affinity(cluster: "Cluster", req: Request) -> int:
     prompt tokens; a conversation's turn k+1 therefore follows turn k's
     pages.  Cold prompts (no tokens, or no replica holds a match) fall
     back to ``least_kv`` so affinity never degrades load balancing."""
-    toks = req.prompt_tokens
-    if toks is None:
-        return route_least_kv(cluster, req)
-    best_i, best_len = -1, 0
-    for i, rep in enumerate(cluster.replicas):
-        m = rep.core.prefix_match_len(toks)
-        if m > best_len:
-            best_i, best_len = i, m
+    best_i, best_len = _best_prefix_replica(cluster, req)
     if best_len == 0:
         return route_least_kv(cluster, req)
     return best_i
@@ -147,6 +190,7 @@ register_routing_policy("round_robin", route_round_robin)
 register_routing_policy("least_kv", route_least_kv)
 register_routing_policy("min_ttft", route_min_ttft)
 register_routing_policy("prefix_affinity", route_prefix_affinity)
+register_routing_policy("d2lpm", route_d2lpm)
 
 
 # ---------------------------------------------------------------------------

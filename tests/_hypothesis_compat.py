@@ -32,4 +32,25 @@ except ImportError:                      # pragma: no cover - env dependent
 
     st = _AnyStrategy()
 
-__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+if HAVE_HYPOTHESIS:
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, precondition, rule,
+                                     run_state_machine_as_test)
+else:                                    # pragma: no cover - env dependent
+    class RuleBasedStateMachine:
+        """Inert stand-in: state-machine classes still *define* cleanly
+        without hypothesis; the tests that would run them skip."""
+
+    def _identity_decorator(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    rule = precondition = invariant = initialize = _identity_decorator
+
+    def run_state_machine_as_test(machine, settings=None):
+        pytest.skip("hypothesis not installed")
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st",
+           "RuleBasedStateMachine", "initialize", "invariant",
+           "precondition", "rule", "run_state_machine_as_test"]

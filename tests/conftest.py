@@ -18,6 +18,23 @@ _HAVE_TIMEOUT_PLUGIN = importlib.util.find_spec("pytest_timeout") is not None
 _FALLBACK_TIMEOUT_S = 300
 
 
+def pytest_collection_modifyitems(config, items):
+    """Tier-1 runs the fast subset first: tests marked ``kernels`` (jit
+    compile dominated) and ``slow`` (full grids, repeated benchmark
+    runs) are reordered to the end of the collection, so a plain
+    ``pytest -x -q`` fails fast on logic regressions before paying for
+    the heavy tail.  The sort is stable: relative order inside each
+    group — which some modules rely on (e.g. the parity matrix's final
+    totals check) — is preserved."""
+    def weight(item):
+        if item.get_closest_marker("slow"):
+            return 2
+        if item.get_closest_marker("kernels"):
+            return 1
+        return 0
+    items.sort(key=weight)
+
+
 def pytest_addoption(parser):
     if not _HAVE_TIMEOUT_PLUGIN:
         # claim the same ini key pytest-timeout would, so pyproject's

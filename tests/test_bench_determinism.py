@@ -1,0 +1,76 @@
+"""Benchmark determinism: same seed, same process, same payload.
+
+Every registered benchmark is run twice in ``--smoke``/quick mode and
+the two emitted ``BENCH_<name>.json`` payloads must be identical after
+stripping the fields that *measure* wall time (``us_per_call``,
+``wall_s``, ``unix_time``).  Everything else — served counts, hit
+rates, TTFT percentiles, Jain indices, every ``derived`` string — is
+computed on the modeled clock from seeded RNGs and must not move
+between runs.
+
+This catches the hidden-state leak class that silently poisons the perf
+trajectory: benchmark state surviving into the next run (the memoised
+predictor used to leak its recalibrated bias EMA across ``run_sim``
+calls — see ``benchmarks.common.predictor``), unseeded RNG, or wall
+clock bleeding into a "derived" metric.
+
+Marked ``slow``: the whole quick benchmark suite runs twice; collection
+ordering (tests/conftest.py) pushes it after the fast subset.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import write_bench_json          # noqa: E402
+from benchmarks.run import BENCHES                      # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+VOLATILE_KEYS = {"us_per_call", "wall_s", "unix_time"}
+
+
+def _normalize(payload: dict) -> dict:
+    out = copy.deepcopy(payload)
+    for k in VOLATILE_KEYS:
+        out.pop(k, None)
+    for row in out.get("rows", ()):
+        for k in VOLATILE_KEYS:
+            row.pop(k, None)
+    # raw CSV lines carry the wall-time second field: blank it the same
+    # way the parsed rows drop us_per_call
+    out["raw"] = [",".join(p if i != 1 else "_"
+                           for i, p in enumerate(line.split(",", 2)))
+                  if not line.startswith("#") else line
+                  for line in out.get("raw", ())]
+    return out
+
+
+def _payload(mod_name: str, out_dir) -> dict:
+    mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+    lines = list(mod.run(quick=True))
+    old = os.environ.get("BENCH_OUT")
+    os.environ["BENCH_OUT"] = str(out_dir)
+    try:
+        path = write_bench_json(mod_name, lines)
+    finally:
+        if old is None:
+            os.environ.pop("BENCH_OUT", None)
+        else:
+            os.environ["BENCH_OUT"] = old
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("mod_name", [name for name, _ in BENCHES])
+def test_benchmark_is_deterministic_across_reruns(mod_name, tmp_path):
+    a = _payload(mod_name, tmp_path / "run1")
+    b = _payload(mod_name, tmp_path / "run2")
+    na, nb = _normalize(a), _normalize(b)
+    assert na == nb, (
+        f"benchmark {mod_name!r} is nondeterministic across same-process "
+        "reruns: hidden RNG, wall-clock, or state leaking between runs")

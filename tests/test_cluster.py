@@ -187,3 +187,60 @@ def test_engine_cluster_end_to_end():
     assert all(n > 0 for n in s["per_replica"])
     # shared counters: one global service table across both engines
     assert reps[0].sched.service is reps[1].sched.service
+
+
+# -- d2lpm routing (DESIGN.md §11) --------------------------------------------
+def test_d2lpm_registered_and_completes(cm):
+    from repro.serving.cluster import make_sim_cluster
+
+    assert "d2lpm" in ROUTING_POLICIES
+    cl = make_sim_cluster(3, cm, scheduler="dlpm", policy="d2lpm",
+                          sim_cfg=SimConfig(max_batch=8,
+                                            kv_budget_tokens=8000,
+                                            prefix_cache=True))
+    # no prompt_tokens at all: threshold fallback must not crash
+    reqs = [Request(rid=i, client=f"c{i % 3}", arrival=0.05 * i,
+                    prompt_len=40, output_len=4, keywords=("chat",))
+            for i in range(9)]
+    res = cl.run(reqs, max_time=1e9)
+    assert res.summary()["finished"] == 9
+
+
+def test_d2lpm_follows_pages_above_threshold(cm):
+    """A conversation's later turns must land on the replica that cached
+    the earlier ones; a cold prompt must load-balance instead of
+    sticking to replica 0."""
+    from repro.serving.cluster import make_sim_cluster
+    from repro.workloads import multiturn_sharegpt_like
+
+    trace = multiturn_sharegpt_like(n_clients=6, n_conversations=2, seed=3)
+    hits = {}
+    for policy in ("least_kv", "d2lpm"):
+        cl = make_sim_cluster(
+            3, cm, scheduler="dlpm", policy=policy,
+            sim_cfg=SimConfig(max_batch=8, kv_budget_tokens=30_000,
+                              prefix_cache=True))
+        res = cl.run([copy.deepcopy(r) for r in trace], max_time=1e9)
+        assert res.summary()["finished"] == len(trace)
+        hits[policy] = res.cache_hit_rate()
+        # routing spread: d2lpm must not funnel everything to one replica
+        assert len(set(res.routed_to.values())) > 1
+    assert hits["d2lpm"] > hits["least_kv"]
+
+
+def test_d2lpm_deficits_are_cluster_global(cm):
+    """DLPM replicas under d2lpm routing share one deficit table: a
+    client admitted on any replica charges the counter every replica's
+    quantum check reads."""
+    from repro.serving.cluster import make_sim_cluster
+
+    cl = make_sim_cluster(2, cm, scheduler="dlpm", policy="d2lpm",
+                          sim_cfg=SimConfig(max_batch=4,
+                                            kv_budget_tokens=8000,
+                                            prefix_cache=True))
+    s0, s1 = (rep.sched for rep in cl.replicas)
+    assert s0.counter is s1.counter
+    reqs = [Request(rid=i, client="c", arrival=0.01 * i, prompt_len=32,
+                    output_len=4, keywords=("chat",)) for i in range(4)]
+    cl.run(reqs, max_time=1e9)
+    assert s0.counter["c"] == s1.counter["c"] > 0

@@ -7,6 +7,9 @@ import pytest
 from repro.kernels import flash_attention, paged_attention, ssd_scan
 from repro.kernels import ref as kref
 
+pytestmark = pytest.mark.kernels   # jit-compile heavy: reordered after
+#                                    the fast subset (tests/conftest.py)
+
 
 @pytest.mark.parametrize("S,Hq,Hkv,D,causal,window,bq,bkv", [
     (128, 8, 2, 64, True, 0, 64, 64),

@@ -1,0 +1,287 @@
+"""Model-based test harness for the shared-prefix radix KV cache.
+
+The radix tree (DESIGN.md §9) is load-bearing for three PRs — prefix
+sharing, preemption headroom accounting, and DLPM locality scoring — but
+until now only had example-based tests.  This module drives random
+``insert`` / ``match`` / ``adopt`` / ``free_request`` / ``evict``
+sequences against a brute-force *reference model* (a dict of published
+page chains) and asserts, after every operation:
+
+- **match lengths**: ``PrefixCache.match_len``/``lookup`` equal the
+  reference's longest page-aligned common prefix over all published
+  sequences whose page chain is still resident (eviction is observed
+  per-page through a ``release_cached`` wrapper, so the reference knows
+  exactly which chain prefixes survive);
+- **refcounts**: every page's pool refcount equals the number of live
+  requests whose block tables reference it, free list and live set
+  partition the pool, and adopted-page prefixes are physically the
+  reference's predicted chain pages;
+- **pinned-page accounting**: ``pinned_unaccounted_pages`` (the §10
+  KV-headroom deduction) equals the reference's count of cached pages
+  whose only live references are adoptions.
+
+Two drivers share the checker: a hypothesis *stateful* machine (skipped
+cleanly when hypothesis is not installed) and a seeded random-walk test
+that always runs, so the harness itself is exercised in every
+environment.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import (HAVE_HYPOTHESIS, RuleBasedStateMachine,
+                                invariant, rule, run_state_machine_as_test,
+                                settings, st)
+
+from repro.core import Request
+from repro.serving.kv_cache import PagePool
+from repro.serving.prefix_cache import PrefixCache
+
+PS = 4          # page size: small enough that splits/caps happen often
+N_PAGES = 48    # small enough that eviction pressure is reachable
+
+
+def mk_req(rid, tokens):
+    tokens = np.asarray(tokens, np.int32)
+    return Request(rid=rid, client="c", arrival=0.0,
+                   prompt_len=len(tokens), output_len=2,
+                   keywords=("chat",), prompt_tokens=tokens)
+
+
+class RadixModel:
+    """Reference model + invariant checker around a real PrefixCache.
+
+    Published sequences are remembered as (token tuple, page chain,
+    chain eviction epochs); a chain page "survives" while its eviction
+    epoch is unchanged.  Everything the checker predicts — match
+    lengths, adopted page ids, refcounts, pinned accounting — is
+    computed from this shadow state plus the pool's observable block
+    tables, never from the radix tree itself.
+    """
+
+    def __init__(self, n_pages=N_PAGES, page_size=PS):
+        self.ps = page_size
+        self.pool = PagePool(n_pages, page_size)
+        self.cache = PrefixCache(self.pool)
+        self.now = 0.0
+        self.next_rid = 0
+        self.published = []          # (tokens, [page...], [epoch...])
+        self.adopted = {}            # live rid -> list of adopted pages
+        self.evict_epoch = {}        # page -> times evicted so far
+        # observe evictions per page: cache.evict is the only caller of
+        # release_cached, so wrapping it tells the model exactly which
+        # chain pages left the tree (and when a page id is later reused
+        # for new content, old chains stay dead — epochs only grow)
+        orig = self.pool.release_cached
+
+        def _recording_release(pages):
+            for p in pages:
+                self.evict_epoch[p] = self.evict_epoch.get(p, 0) + 1
+            return orig(pages)
+
+        self.pool.release_cached = _recording_release
+
+    # -- reference predictions ------------------------------------------------
+    def _tick(self):
+        self.now += 1.0
+        return self.now
+
+    def expected_match_pages(self, tokens):
+        """(k, chain_prefix): longest surviving page-aligned common
+        prefix over published sequences, in pages."""
+        toks = tuple(int(t) for t in tokens)
+        best_k, best_chain = 0, []
+        for seq, chain, epochs in self.published:
+            k = 0
+            while (k < len(chain)
+                   and (k + 1) * self.ps <= len(toks)
+                   and seq[k * self.ps:(k + 1) * self.ps]
+                   == toks[k * self.ps:(k + 1) * self.ps]
+                   and self.evict_epoch.get(chain[k], 0) == epochs[k]):
+                k += 1
+            if k > best_k:
+                best_k, best_chain = k, chain[:k]
+        return best_k, best_chain
+
+    # -- operations -----------------------------------------------------------
+    def probe(self, tokens):
+        """match: the side-effect-free probe equals the reference."""
+        k, _ = self.expected_match_pages(tokens)
+        got = self.cache.match_len(np.asarray(tokens, np.int32))
+        assert got == k * self.ps, (got, k * self.ps, tokens)
+        self.check_invariants()
+
+    def _lookup_and_attach(self, tokens):
+        rid = self.next_rid
+        self.next_rid += 1
+        req = mk_req(rid, tokens)
+        m, chain = self.expected_match_pages(tokens)
+        cap = (req.prompt_len - 1) // self.ps
+        want = min(m, cap)
+        got = self.cache.lookup(req, self._tick())
+        assert got == want * self.ps, (got, want * self.ps, tokens)
+        self.cache.attach(req, self.now)
+        owned = self.pool.owned.get(rid, [])
+        # the adopted block-table prefix is physically the cached chain
+        assert owned[:want] == chain[:want], (owned, chain, want)
+        self.adopted[rid] = list(owned[:want])
+        return req, m, chain
+
+    def adopt(self, tokens):
+        """lookup+attach without publishing (a request that never
+        finishes prefill — e.g. preempted first)."""
+        self._lookup_and_attach(tokens)
+        self.check_invariants()
+
+    def publish(self, tokens):
+        """lookup+attach+insert: the full admission→prefill-done path."""
+        req, m, chain = self._lookup_and_attach(tokens)
+        n_full = req.prompt_len // self.ps
+        owned_before = len(self.pool.owned.get(req.rid, ()))
+        fits = self.pool.can_alloc((n_full - owned_before) * self.ps)
+        self.cache.insert(req, self.now)
+        if n_full > 0 and fits:
+            owned = self.pool.owned[req.rid]
+            new_chain = chain[:m] + owned[m:n_full]
+            assert len(new_chain) == n_full
+            self.published.append(
+                (tuple(int(t) for t in tokens[:n_full * self.ps]),
+                 new_chain,
+                 [self.evict_epoch.get(p, 0) for p in new_chain]))
+        self.check_invariants()
+
+    def free(self, idx):
+        """Release a live request (refcount decrement path)."""
+        if not self.adopted:
+            return
+        rid = sorted(self.adopted)[idx % len(self.adopted)]
+        if rid in self.pool.owned:
+            self.pool.free_request(rid)
+        del self.adopted[rid]
+        self.check_invariants()
+
+    def evict(self, n):
+        self.cache.evict(n)
+        self.check_invariants()
+
+    # -- invariants -----------------------------------------------------------
+    def check_invariants(self):
+        pool = self.pool
+        # (a) match equivalence for every published sequence
+        for seq, _chain, _ep in self.published:
+            k, _ = self.expected_match_pages(seq)
+            got = self.cache.match_len(np.asarray(seq, np.int32))
+            assert got == k * self.ps, (seq, got, k * self.ps)
+        # (b) refcounts == live block-table references
+        counts = {}
+        for rid, pages in pool.owned.items():
+            assert len(set(pages)) == len(pages), f"rid {rid} dup pages"
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        for p, rc in pool.refcount.items():
+            assert rc == counts.get(p, 0), (p, rc, counts.get(p, 0))
+        for p in counts:
+            assert p in pool.refcount
+        # (c) pool partition: every page is exactly free or live/warm
+        assert set(pool.free).isdisjoint(pool.refcount)
+        assert len(pool.free) + len(pool.refcount) == pool.n_pages
+        assert len(set(pool.free)) == len(pool.free)
+        # (d) cached pages are always tracked, never free
+        assert pool.cached <= set(pool.refcount)
+        assert pool.cached.isdisjoint(pool.free)
+        # (e) pinned-unaccounted accounting (DESIGN.md §10 headroom):
+        #     cached + referenced only through adoptions, per the shadow
+        #     adoption sets the model recorded at attach time
+        adopter_refs = {}
+        for rid, pages in self.adopted.items():
+            for p in pages:
+                adopter_refs[p] = adopter_refs.get(p, 0) + 1
+        expected = sum(
+            1 for p in pool.cached
+            if pool.refcount.get(p, 0) > 0
+            and adopter_refs.get(p, 0) == pool.refcount[p])
+        assert pool.pinned_unaccounted_pages() == expected
+
+
+# ---------------------------------------------------------------------------
+# driver 1: hypothesis stateful machine (skips cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+TOKENS = st.lists(st.integers(1, 5), min_size=1, max_size=28)
+
+
+class RadixMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.m = RadixModel()
+
+    @rule(toks=TOKENS)
+    def publish(self, toks):
+        self.m.publish(toks)
+
+    @rule(toks=TOKENS)
+    def adopt(self, toks):
+        self.m.adopt(toks)
+
+    @rule(toks=TOKENS)
+    def probe(self, toks):
+        self.m.probe(toks)
+
+    @rule(idx=st.integers(0, 31))
+    def free(self, idx):
+        self.m.free(idx)
+
+    @rule(n=st.integers(1, 8))
+    def evict(self, n):
+        self.m.evict(n)
+
+    @invariant()
+    def consistent(self):
+        self.m.check_invariants()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_radix_model_stateful():
+    from hypothesis import settings as hsettings
+    run_state_machine_as_test(
+        RadixMachine,
+        settings=hsettings(max_examples=30, stateful_step_count=30,
+                           deadline=None))
+
+
+# ---------------------------------------------------------------------------
+# driver 2: seeded random walk (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_radix_model_random_walk(seed):
+    rng = np.random.default_rng(seed)
+    m = RadixModel()
+    # a small alphabet + shared prefixes makes collisions/splits likely;
+    # extending a previously published sequence mimics conversation turns
+    for _ in range(250):
+        op = rng.choice(["publish", "adopt", "probe", "free", "evict"],
+                        p=[0.35, 0.15, 0.25, 0.15, 0.10])
+        if op in ("publish", "adopt", "probe"):
+            if m.published and rng.random() < 0.5:
+                base, _, _ = m.published[rng.integers(len(m.published))]
+                toks = list(base[:int(rng.integers(1, len(base) + 1))])
+                toks += list(rng.integers(1, 6,
+                                          size=int(rng.integers(0, 12))))
+            else:
+                toks = list(rng.integers(1, 6,
+                                         size=int(rng.integers(1, 29))))
+            getattr(m, op)(toks)
+        elif op == "free":
+            m.free(int(rng.integers(0, 32)))
+        else:
+            m.evict(int(rng.integers(1, 9)))
+    # the walk must actually have exercised the interesting paths
+    assert m.published and m.cache.stats.lookups > 0
+
+
+def test_model_detects_seeded_divergence():
+    """The harness itself must fail loudly if tree and reference drift:
+    corrupting the reference chain makes the invariant trip."""
+    m = RadixModel()
+    m.publish(list(range(1, 13)))
+    seq, chain, epochs = m.published[0]
+    m.published[0] = (seq, chain, [e + 1 for e in epochs])  # fake eviction
+    with pytest.raises(AssertionError):
+        m.check_invariants()

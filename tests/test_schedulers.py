@@ -132,3 +132,132 @@ def test_equinox_prefers_underserved():
         eq.on_admit(r, 0.0)
         eq.on_token(r, 0.0, r.output_len)
     assert eq.pop_next(0.0).client == "light"
+
+
+# -- DLPM: deficit longest-prefix-match (DESIGN.md §11) ------------------------
+def _probe_from(table):
+    """Fake locality probe: tokens-matched by client name (what BatchCore
+    threads in from the prefix cache in production)."""
+    return lambda req: table.get(req.client, 0)
+
+
+def test_dlpm_without_probe_is_vtc_order():
+    """No prefix cache attached -> every locality score is 0 and DLPM
+    must reduce to smallest-counter (VTC) admission order."""
+    s = make_scheduler("dlpm")
+    s.on_arrival(_req(0, "a", 0.0, p=10), 0.0)
+    s.on_arrival(_req(1, "b", 0.0, p=10), 0.0)
+    s.counter["a"] = 100.0
+    assert s.pop_next(0.0).client == "b"       # smaller counter wins
+
+
+def test_dlpm_matches_vtc_on_exact_counter_ties():
+    """The documented probe-less-DLPM == VTC equivalence must hold down
+    to exact counter ties (the normal state for brand-new clients):
+    both pick the first minimal candidate in queue insertion order."""
+    from repro.core.schedulers import VTC
+
+    def arrivals(s):
+        for rid, c in ((0, "z"), (1, "a"), (2, "m")):   # insertion order
+            s.on_arrival(_req(rid, c, 0.0, p=10), 0.0)
+        return [s.pop_next(0.0).client for _ in range(3)]
+
+    assert arrivals(make_scheduler("dlpm")) == arrivals(VTC())
+
+
+def test_dlpm_prefers_longest_cached_prefix_within_quantum():
+    s = make_scheduler("dlpm", quantum=512)
+    for rid, c in ((0, "a"), (1, "b"), (2, "c")):
+        s.on_arrival(_req(rid, c, 0.0, p=64), 0.0)
+    s.locality_probe = _probe_from({"a": 0, "b": 32, "c": 16})
+    s.counter.update(a=0.0, b=100.0, c=50.0)   # all within quantum
+    assert s.pop_next(0.0).client == "b"       # longest match wins
+    assert s.pop_next(0.0).client == "c"
+    assert s.pop_next(0.0).client == "a"
+
+
+def test_dlpm_quantum_bounds_locality_starvation():
+    """A warm client more than ``quantum`` weighted tokens ahead of the
+    coldest candidate leaves the fairness-feasible set: locality cannot
+    override the deficit bound (the DLPM guarantee)."""
+    s = make_scheduler("dlpm", quantum=64)
+    s.on_arrival(_req(0, "cold", 0.0, p=64), 0.0)
+    s.on_arrival(_req(1, "warm", 0.0, p=64), 0.0)
+    s.locality_probe = _probe_from({"warm": 64, "cold": 0})
+    s.counter.update(cold=0.0, warm=100.0)     # warm is past the quantum
+    assert s.pop_next(0.0).client == "cold"
+
+
+def test_dlpm_victim_prefers_lowest_locality_of_worst_client():
+    s = make_scheduler("dlpm")
+    rs = [_req(0, "a", 0.0), _req(1, "a", 1.0), _req(2, "b", 2.0)]
+    rs[0].cached_prefix, rs[1].cached_prefix = 16, 0
+    s.counter.update(a=100.0, b=0.0)
+    v = s.select_victim(rs, 3.0)
+    assert v.rid == 1            # worst client "a", lowest cached prefix
+    s.victim_policy = "lifo"
+    assert s.select_victim(rs, 3.0).rid == 2   # plain youngest overall
+
+
+def test_dlpm_counters_shared_like_vtc():
+    """D²LPM prerequisite: DLPM's deficit table is the ``counter`` attr
+    ``share_fairness_state`` already re-binds, so cluster-global deficits
+    come for free."""
+    from repro.serving.cluster import share_fairness_state
+
+    a, b = make_scheduler("dlpm"), make_scheduler("dlpm")
+    share_fairness_state([a, b])
+    a.on_arrival(_req(0, "c", 0.0), 0.0)
+    r = a.pop_next(0.0)
+    a.on_admit(r, 0.0)
+    assert b.counter["c"] == a.counter["c"] > 0
+
+
+def test_equinox_locality_bonus_tilts_argmin():
+    pred = ConstPredictor(10.0)
+    s = make_scheduler("equinox", predictor=pred, locality_bonus=0.5)
+    s.on_arrival(_req(0, "a", 0.0, p=64), 0.0)
+    s.on_arrival(_req(1, "b", 0.0, p=64), 0.0)
+    s.ufc.update(a=10.0, b=11.0)               # a slightly ahead on HF
+    s.rfc.update(a=0.0, b=0.0)
+    s.locality_probe = _probe_from({"b": 64})  # b fully cached
+    assert s.pop_next(0.0).client == "b"       # bonus overrides the gap
+    # without the probe (no cache) the default argmin-HF picks a
+    s2 = make_scheduler("equinox", predictor=ConstPredictor(10.0),
+                        locality_bonus=0.5)
+    s2.on_arrival(_req(0, "a", 0.0, p=64), 0.0)
+    s2.on_arrival(_req(1, "b", 0.0, p=64), 0.0)
+    s2.ufc.update(a=10.0, b=11.0)
+    s2.rfc.update(a=0.0, b=0.0)
+    assert s2.pop_next(0.0).client == "a"
+
+
+# -- make_scheduler user-input validation (regression: was bare assert) --------
+@pytest.mark.parametrize("call", [
+    lambda: make_scheduler("nope"),
+    lambda: make_scheduler("equinox"),                  # predictor missing
+    lambda: make_scheduler("vtc", victim_policy="oops"),
+    lambda: make_scheduler("vtc", omega_cached=1.5),
+    lambda: make_scheduler("vtc", omega_cached=-0.1),
+    lambda: make_scheduler("dlpm", quantum=0),
+    lambda: make_scheduler("dlpm", quantum=-5),
+    lambda: make_scheduler("vtc", locality_bonus=0.1),  # Equinox-only knob
+    lambda: make_scheduler("equinox", predictor=ConstPredictor(),
+                           locality_bonus=-0.2),        # sign typo: would
+    #                                                     penalize locality
+    lambda: make_scheduler("equinox", predictor=ConstPredictor(),
+                           locality_bonus=1.5),
+])
+def test_make_scheduler_rejects_bad_input_with_valueerror(call):
+    """User-input validation must raise ValueError, never ``assert``:
+    asserts vanish under ``python -O``, silently accepting a typo'd
+    victim_policy and running the wrong preemption policy."""
+    with pytest.raises(ValueError):
+        call()
+
+
+def test_make_scheduler_valid_victim_and_omega_still_accepted():
+    s = make_scheduler("vtc", victim_policy="lifo", omega_cached=0.5)
+    assert s.victim_policy == "lifo" and s.omega_cached == 0.5
+    d = make_scheduler("dlpm", quantum=2048)
+    assert d.quantum == 2048.0 and d.name == "dlpm"
