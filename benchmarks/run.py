@@ -34,6 +34,8 @@ BENCHES = [
                  "misprediction; fair vs LIFO victim selection"),
     ("locality_fairness", "DESIGN.md §11: DLPM vs Equinox vs VTC duel + "
                           "d2lpm routing on the multiturn trace"),
+    ("slo_attainment", "DESIGN.md §12: SLO-auto per-iteration prefill "
+                       "budgets vs static chunking, TTFT/TBT attainment"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),

@@ -1,0 +1,164 @@
+"""SLO-controllable batch formation (DESIGN.md §12).
+
+Adaptive per-iteration prefill token budgets (``slo_budget="auto"``) vs
+the static Sarathi-style chunk budget (``prefill_chunk=512``), measured
+as *SLO attainment*: the fraction of finished requests whose TTFT /
+mean TBT landed under their class target (``interactive``: 1.5 s TTFT /
+40 ms TBT; ``batch``: 30 s / 500 ms).
+
+Two traces, both mixed-class:
+
+- **saturated multiturn** — the ShareGPT-like multiturn trace
+  (DESIGN.md §9) with half the clients tagged interactive.  Static
+  512-token chunks stretch every decode iteration past the 40 ms
+  interactive TBT target whenever a long turn is prefilling; the auto
+  budget solves for the largest chunk the current decode batch can
+  absorb, so interactive decodes keep their cadence while batch-class
+  windows (0.5 s target) still take near-cap chunks.
+- **bursty diurnal** — ``workloads.diurnal``: interactive arrival rate
+  swinging trough-to-peak each cycle over constant batch-class story
+  jobs.  Peaks are where the static budget hurts most (burst of prompt
+  chunks into an interactive-heavy decode batch); troughs are where it
+  wastes capacity the auto budget's higher cap (2048) can use.
+
+Gate: on both traces, interactive-class TBT attainment must be strictly
+higher under auto than static, at equal-or-better total throughput.
+
+    PYTHONPATH=src python benchmarks/slo_attainment.py [--smoke]
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SimConfig, Simulator, make_scheduler
+from repro.core.request import FINISHED
+from repro.predictor import Oracle
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import diurnal, multiturn_sharegpt_like, tag_slo_classes
+
+CM = CostModel(get_config("llama2-7b"), A100_80G)
+
+FULL = dict(mt=dict(n_clients=16, n_conversations=6, think_time=0.5, seed=5),
+            di=dict(duration=90.0, seed=5, n_interactive=6, n_batch=2,
+                    base_rate=0.5, peak_mult=6.0, period=45.0,
+                    batch_rate=0.4, batch_in=8000, batch_out=64),
+            max_batch=32, kv_budget=60_000, static_chunk=512,
+            auto_cap=2048, sched="equinox")
+SMOKE = dict(mt=dict(n_clients=12, n_conversations=4, think_time=1.0, seed=5),
+             di=dict(duration=45.0, seed=5, n_interactive=4, n_batch=2,
+                     base_rate=0.4, peak_mult=6.0, period=30.0,
+                     batch_rate=0.4, batch_in=8000, batch_out=64),
+             max_batch=32, kv_budget=60_000, static_chunk=512,
+             auto_cap=2048, sched="equinox")
+
+
+def traces(p):
+    mt = tag_slo_classes(multiturn_sharegpt_like(**p["mt"]))
+    di = diurnal(**p["di"])
+    return [("multiturn", mt), ("diurnal", di)]
+
+
+def _serve(p, wl, mode: str):
+    """One simulator run; ``mode`` picks the budget policy arm."""
+    sched = make_scheduler(p["sched"], predictor=Oracle(CM))
+    cfg = SimConfig(max_batch=p["max_batch"],
+                    kv_budget_tokens=p["kv_budget"],
+                    prefill_chunk=(p["auto_cap"] if mode == "auto"
+                                   else p["static_chunk"]),
+                    slo_budget=mode)
+    sim = Simulator(CM, sched, cfg)
+    t0 = time.monotonic()
+    res = sim.run(copy.deepcopy(wl))
+    wall = time.monotonic() - t0
+    return _metrics(res), wall
+
+
+def _metrics(res):
+    m = dict(throughput=res.throughput_tokens_per_s())
+    budgets = [b for b in res.timeline.budget if b]
+    m["mean_budget"] = float(np.mean(budgets)) if budgets else 0.0
+    for cls in ("interactive", "batch"):
+        done = [r for r in res.requests
+                if r.slo_class == cls and r.state == FINISHED]
+        ttfts = np.array([r.ttft() for r in done
+                          if r.ttft() is not None])
+        tbts = np.array([r.tbt() for r in done if r.tbt() is not None])
+        m[cls] = dict(
+            n=len(done),
+            p99_ttft=float(np.percentile(ttfts, 99)) if len(ttfts) else 0.0,
+            p99_tbt=float(np.percentile(tbts, 99)) if len(tbts) else 0.0,
+            ttft_att=100.0 * float(np.mean([r.ttft_met() for r in done
+                                            if r.ttft_met() is not None]))
+            if done else 0.0,
+            tbt_att=100.0 * float(np.mean([r.tbt_met() for r in done
+                                           if r.tbt_met() is not None]))
+            if done else 0.0)
+    return m
+
+
+def run(quick: bool = False):
+    p = SMOKE if quick else FULL
+    out = []
+    gates = []
+    for trace_name, wl in traces(p):
+        arms = {}
+        for mode in ("static", "auto"):
+            m, wall = _serve(p, wl, mode)
+            arms[mode] = m
+            i, b = m["interactive"], m["batch"]
+            out.append(
+                f"slo_attainment/{trace_name}_{mode},{wall * 1e6:.0f},"
+                f"tput={m['throughput']:.0f}tok/s "
+                f"budget={m['mean_budget']:.0f} "
+                f"inter_tbt_att={i['tbt_att']:.1f}% "
+                f"inter_ttft_att={i['ttft_att']:.1f}% "
+                f"inter_p99tbt={i['p99_tbt'] * 1e3:.1f}ms "
+                f"inter_p99ttft={i['p99_ttft']:.2f}s "
+                f"batch_tbt_att={b['tbt_att']:.1f}% "
+                f"batch_p99tbt={b['p99_tbt'] * 1e3:.0f}ms "
+                f"n={i['n']}+{b['n']}")
+        au, st = arms["auto"], arms["static"]
+        ok = (au["interactive"]["tbt_att"] > st["interactive"]["tbt_att"]
+              and au["throughput"] >= st["throughput"])
+        gates.append(ok)
+        out.append(
+            f"slo_attainment/{trace_name}_gate,0,"
+            f"tbt_att_auto={au['interactive']['tbt_att']:.1f}% "
+            f"tbt_att_static={st['interactive']['tbt_att']:.1f}% "
+            f"tput_auto={au['throughput']:.0f} "
+            f"tput_static={st['throughput']:.0f} ok={ok}")
+    out.append(f"slo_attainment/summary,0,ok={all(gates)}")
+    return out
+
+
+def main():
+    import argparse
+
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import write_bench_json
+    except ImportError:                    # python benchmarks/slo_attainment.py
+        from common import write_bench_json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces for CI (<1 min)")
+    args = ap.parse_args()
+    lines = run(quick=args.smoke)
+    for line in lines:
+        print(line, flush=True)
+    write_bench_json("slo_attainment", lines, {"smoke": args.smoke})
+    ok = lines[-1].rsplit("ok=", 1)[-1] == "True"
+    if not ok:
+        raise SystemExit(
+            "slo_attainment failed its gates: the auto budget must raise "
+            "interactive-class TBT attainment over the static "
+            "prefill_chunk baseline at equal-or-better total throughput "
+            "on every trace")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,7 @@ from repro.core.counters import (DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DELTA,
                                  rfc_increment, select_min_hf, ufc_increment)
 from repro.core.metrics import (HFObserver, jain, service_difference_stats,
                                 summarize)
-from repro.core.request import Request
+from repro.core.request import Request, SLO_CLASSES, SLOTarget, set_slo
 from repro.core.schedulers import (DLPM, FCFS, RPM, VTC, Equinox,
                                    SchedulerBase, make_scheduler)
 from repro.core.simulator import SimConfig, SimResult, Simulator
@@ -14,6 +14,7 @@ from repro.core.simulator import SimConfig, SimResult, Simulator
 __all__ = ["DEFAULT_ALPHA", "DEFAULT_BETA", "DEFAULT_DELTA",
            "OUT_TOKEN_WEIGHT", "HFParams", "hf_scores", "rfc_increment",
            "select_min_hf", "ufc_increment", "HFObserver", "jain",
-           "service_difference_stats", "summarize", "Request", "DLPM",
+           "service_difference_stats", "summarize", "Request",
+           "SLO_CLASSES", "SLOTarget", "set_slo", "DLPM",
            "FCFS", "RPM", "VTC", "Equinox", "SchedulerBase",
            "make_scheduler", "SimConfig", "SimResult", "Simulator"]

@@ -16,6 +16,46 @@ DROPPED = "dropped"
 PREEMPTED = "preempted"     # evicted from the batch (recompute on re-admit)
 
 
+# -- SLO classes (DESIGN.md §12) ----------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """Delivered-QoS targets of one service class: time-to-first-token
+    and (mean) time-between-tokens, both in seconds on the modeled
+    clock."""
+    ttft: float
+    tbt: float
+
+
+# The two paper-style service classes (FairBatching, arXiv:2510.14392):
+# ``interactive`` — a human is watching the stream, so the decode cadence
+# must stay under the reading/typing threshold; ``batch`` — offline
+# summarization/codegen traffic that only cares about completing.  The
+# TBT numbers are set against the A100 roofline this repo models: a
+# decode-only iteration of a moderate batch costs ~9-15 ms incl. the
+# refresh overhead, a full 512-token prefill chunk pushes the mixed
+# iteration past 50 ms — so 40 ms forces the budget solver to actually
+# shrink chunks while staying feasible, and 500 ms never binds.
+SLO_CLASSES = {
+    "interactive": SLOTarget(ttft=1.5, tbt=0.040),
+    "batch": SLOTarget(ttft=30.0, tbt=0.500),
+}
+
+
+def set_slo(req: "Request", slo_class: str, *, ttft: float = None,
+            tbt: float = None) -> "Request":
+    """Tag ``req`` with a service class and its TTFT/TBT targets (class
+    defaults from ``SLO_CLASSES``, individually overridable).  Returns
+    the request so workload generators can tag inline."""
+    if slo_class not in SLO_CLASSES:
+        raise ValueError(f"unknown SLO class {slo_class!r}; choose from "
+                         f"{tuple(SLO_CLASSES)}")
+    tgt = SLO_CLASSES[slo_class]
+    req.slo_class = slo_class
+    req.ttft_slo = float(ttft if ttft is not None else tgt.ttft)
+    req.tbt_slo = float(tbt if tbt is not None else tgt.tbt)
+    return req
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -47,6 +87,11 @@ class Request:
     #                                     the re-admission KV reservation
     prompt_tokens: Optional[np.ndarray] = None   # token ids (engine decode,
     #                                     radix prefix keys, affinity routing)
+    # SLO class (DESIGN.md §12) -------------------------------------------
+    slo_class: Optional[str] = None     # "interactive" / "batch" / None
+    ttft_slo: Optional[float] = None    # s; None = no TTFT target
+    tbt_slo: Optional[float] = None     # s; None = no TBT target (the
+    #                                     budget solver ignores this req)
 
     # -- derived -------------------------------------------------------------
     @property
@@ -69,3 +114,39 @@ class Request:
         if self.finish_time is None:
             return None
         return self.finish_time - self.arrival
+
+    # -- SLO accounting (DESIGN.md §12) -----------------------------------
+    def tbt(self, now: float = None) -> Optional[float]:
+        """Mean time between output tokens over the decode phase (first
+        token excluded — its cadence is TTFT's job).  ``now`` prices an
+        in-flight request; finished requests use ``finish_time``.  None
+        until at least two tokens exist."""
+        if self.first_token_time is None or self.generated < 2:
+            return None
+        end = self.finish_time if self.finish_time is not None else now
+        if end is None:
+            return None
+        return max(end - self.first_token_time, 0.0) / (self.generated - 1)
+
+    def ttft_met(self) -> Optional[bool]:
+        if self.ttft_slo is None or self.ttft() is None:
+            return None
+        return self.ttft() <= self.ttft_slo
+
+    def tbt_met(self) -> Optional[bool]:
+        if self.tbt_slo is None or self.tbt() is None:
+            return None
+        return self.tbt() <= self.tbt_slo
+
+    def slo_violating(self, now: float) -> bool:
+        """Is this *running* request currently missing its class targets?
+        Prefill phase: the TTFT clock has already run past the target.
+        Decode phase: the observed mean TBT exceeds the target.  Used by
+        preemption's victim pool (DESIGN.md §12) — an SLO-violating
+        batch request is the cheapest thing to evict."""
+        if self.first_token_time is None:
+            return (self.ttft_slo is not None
+                    and now - self.arrival > self.ttft_slo)
+        t = self.tbt(now)
+        return (self.tbt_slo is not None and t is not None
+                and t > self.tbt_slo)

@@ -175,6 +175,18 @@ class SchedulerBase:
         head-of-line-block every other client's small ones."""
         raise NotImplementedError
 
+    # -- SLO-aware batch formation (DESIGN.md §12) ---------------------------
+    def prefill_order(self, reqs):
+        """Order PREFILLING requests for the per-iteration chunk budget
+        fill.  The solved budget (``BatchCore.solve_prefill_budget``) is
+        a scarce resource exactly like admission slots, so the same
+        fairness signal decides who gets it: the base policy keeps
+        admission order (FCFS/RPM have no counters), VTC/DLPM fill the
+        smallest-counter client first, Equinox the smallest-HF.  Only
+        consulted when ``BatchConfig.slo_budget == "auto"`` — the static
+        path keeps the historical running order bit-for-bit."""
+        return list(reqs)
+
     # -- preemption (DESIGN.md §10) ------------------------------------------
     @staticmethod
     def _youngest(reqs):
@@ -337,6 +349,15 @@ class VTC(SchedulerBase):
         super().on_preempt(req, now)
         self.counter[req.client] -= getattr(req, "_vtc_charged", 0.0)
         req._vtc_charged = 0.0
+
+    def prefill_order(self, reqs):
+        """Fill the chunk budget for the least-served client first
+        (DESIGN.md §12): under a binding SLO budget the tail of the
+        order may get nothing this iteration, and that starvation must
+        land on whoever is furthest ahead on service.  Stable sort,
+        rid tie-break — deterministic on both frontends."""
+        return sorted(reqs, key=lambda r: (self.counter.get(r.client, 0.0),
+                                           r.rid))
 
     def select_victim(self, running, now):
         """Largest-counter client's youngest request — the VTC framing of
@@ -542,6 +563,13 @@ class Equinox(SchedulerBase):
         self.rfc[req.client] -= getattr(req, "_rfc_charged", 0.0)
         req._ufc_charged = 0.0
         req._rfc_charged = 0.0
+
+    def prefill_order(self, reqs):
+        """Smallest-HF client's chunks first (DESIGN.md §12) — the same
+        holistic order ``pop_next`` admits by decides who consumes the
+        SLO-solved budget when it cannot cover everyone."""
+        hf = self._hf()
+        return sorted(reqs, key=lambda r: (hf.get(r.client, 0.0), r.rid))
 
     def select_victim(self, running, now):
         """Highest-HF client's youngest request (DESIGN.md §10): the most

@@ -53,6 +53,9 @@ class Timeline:
     batch: List[int] = dataclasses.field(default_factory=list)
     tokens: List[float] = dataclasses.field(default_factory=list)
     service: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+    # per-iteration prefill token budget actually granted (DESIGN.md
+    # §12; constant at ``prefill_chunk`` under slo_budget="static")
+    budget: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -265,6 +268,7 @@ class Simulator:
         self.tl.batch.append(len(self.running) + len(done_now))
         self.tl.tokens.append(iter_tokens)
         self.tl.service.append(dict(self.sched.service))
+        self.tl.budget.append(self.core.last_prefill_budget)
         return True
 
     def run(self, requests: List[Request], max_time: float = None) -> SimResult:

@@ -65,6 +65,34 @@ class BatchConfig:
     # exactly into pages); 1 = exact token accounting (slots backend,
     # plain simulator).
     kv_page_size: int = 1
+    # SLO-controllable batch formation (DESIGN.md §12): "static" keeps
+    # the fixed ``prefill_chunk`` budget; "auto" solves, every iteration,
+    # for the largest prefill token budget (still capped by
+    # ``prefill_chunk``) that keeps the decode batch's modeled iteration
+    # time under the strictest running TBT target, and fills it in the
+    # scheduler's fairness order instead of admission order.
+    slo_budget: str = "static"
+
+    def __post_init__(self):
+        """User-input validation — ``ValueError``, never ``assert``
+        (asserts vanish under ``python -O``).  A non-positive
+        ``prefill_chunk`` used to be accepted silently: with
+        ``stall_free=True`` it starved every prefill forever (the
+        admission loop stays work-conserving, so the suite hung instead
+        of failing), and with ``stall_free=False`` the ``1 << 30``
+        whole-prompt fallback masked the typo completely.  Same story
+        for ``kv_page_size``: ``BatchCore``'s defensive ``max(ps, 1)``
+        hid a zero/negative page size that the paged pool could never
+        honor."""
+        if self.prefill_chunk is None or self.prefill_chunk <= 0:
+            raise ValueError(f"prefill_chunk must be a positive token "
+                             f"budget, got {self.prefill_chunk!r}")
+        if self.kv_page_size is None or self.kv_page_size <= 0:
+            raise ValueError(f"kv_page_size must be >= 1 token, got "
+                             f"{self.kv_page_size!r}")
+        if self.slo_budget not in ("static", "auto"):
+            raise ValueError(f"slo_budget must be 'static' or 'auto', "
+                             f"got {self.slo_budget!r}")
 
 
 class BatchCore:
@@ -93,6 +121,8 @@ class BatchCore:
         self.kv_page = max(getattr(self.cfg, "kv_page_size", 1) or 1, 1)
         self.n_preemptions = 0          # preemption events on this replica
         self.blocked_client = None      # set by try_admit on canSchedule fail
+        self.last_prefill_budget = None  # solved budget of the last
+        #                                  plan_prefill (DESIGN.md §12)
 
     # -- locality probe threading (DESIGN.md §11) ----------------------------
     @property
@@ -301,36 +331,146 @@ class BatchCore:
             cands = [r for r in running if r not in preempted]
             if len(cands) <= 1:
                 break
-            victim = self.sched.select_victim(cands, now)
+            victim = self.sched.select_victim(
+                self.slo_victim_pool(cands, now), now)
             if victim is None:
                 break
             self.preempt(victim, now)
             preempted.append(victim)
         return preempted
 
+    @staticmethod
+    def slo_victim_pool(cands: List[Request], now: float) -> List[Request]:
+        """Narrow preemption candidates by SLO class before the
+        scheduler's fairness rule picks inside the pool (DESIGN.md §12,
+        composing with §10's ``select_victim``): when interactive and
+        batch traffic share the batch, batch-class requests absorb the
+        over-commit first — and among those, the ones *already* missing
+        their own targets lose the least delivered QoS.  Single-class
+        batches (including every pre-SLO workload, where ``slo_class``
+        is None everywhere) pass through unchanged, so the §10 policies
+        are bit-identical without class information."""
+        batch = [r for r in cands if r.slo_class != "interactive"]
+        if not batch or len(batch) == len(cands):
+            return cands
+        violating = [r for r in batch if r.slo_violating(now)]
+        return violating or batch
+
     # -- chunked prefill -----------------------------------------------------
+    def strictest_tbt(self, running: List[Request]) -> Optional[float]:
+        """Tightest TBT target among the *decoding* requests — the SLO
+        the next mixed iteration must deliver under (DESIGN.md §12).
+        PREFILLING requests impose nothing here: their clock is TTFT,
+        which the budget serves, not constrains.  None when no running
+        decode carries a target (the solver then falls back to the
+        static cap)."""
+        targets = [r.tbt_slo for r in running
+                   if r.state == DECODING and r.tbt_slo is not None]
+        return min(targets) if targets else None
+
+    def _planned_step_time(self, order: List[Request], ctx_lens,
+                           budget: int) -> float:
+        """Modeled duration of the mixed iteration that ``plan_prefill``
+        would produce with this budget: the same greedy fill over
+        ``order`` (so the solve prices exactly the chunks the plan will
+        take), plus the batch-refresh overhead — assumed worst-case
+        *paid*, since granting budget means the batch is changing."""
+        chunks, rem = [], budget
+        for r in order:
+            if rem <= 0:
+                break
+            c = min(r.prompt_len - r.prefill_done, rem)
+            if c > 0:
+                chunks.append((c, r.prefill_done + c / 2))
+                rem -= c
+        return self.cm.mixed_step_time(chunks, ctx_lens) \
+            + self.cm.hw.batch_overhead
+
+    def solve_prefill_budget(self, order: List[Request], ctx_lens,
+                             tbt_target: float, cap: int) -> int:
+        """Largest prefill token budget B ∈ [0, cap] whose planned mixed
+        iteration stays within ``tbt_target`` — ``CostModel.
+        mixed_step_time`` inverted over the chunk budget (DESIGN.md
+        §12).  The step time is monotone non-decreasing in B (more chunk
+        tokens never price cheaper), so a binary search over the integer
+        budget is exact.  Returns 0 when even a decode-only iteration
+        busts the target (the decode batch must shrink by completion
+        before prefill resumes — never a livelock: decodes finish on
+        their own and the budget reopens).
+
+        Guarantees (property-tested in ``tests/test_slo_batching.py``):
+        monotone non-increasing in decode batch size and in SLO
+        strictness, never exceeds ``cap``, and any B > 0 satisfies
+        the target under the cost model."""
+        total = sum(r.prompt_len - r.prefill_done for r in order)
+        hi = min(cap, total)
+        if hi <= 0:
+            return 0
+        if self._planned_step_time(order, ctx_lens, hi) <= tbt_target:
+            return hi
+        if self._planned_step_time(order, ctx_lens, 0) > tbt_target:
+            return 0
+        lo = 0                         # feasible; hi infeasible
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if self._planned_step_time(order, ctx_lens, mid) <= tbt_target:
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
     def plan_prefill(self, running: List[Request]):
         """Advance PREFILLING requests within this iteration's chunk budget
         (stall-free: running decodes never wait on a long prompt).
 
+        ``slo_budget="static"`` (default): the historical fixed
+        ``prefill_chunk`` budget, filled in ``running`` (admission)
+        order — bit-identical to the pre-§12 planner.
+
+        ``slo_budget="auto"`` (DESIGN.md §12): the budget is solved per
+        iteration — the largest B ≤ ``prefill_chunk`` whose mixed
+        iteration keeps the decode batch under its strictest running
+        TBT target — and filled in the *scheduler's* fairness order
+        (``SchedulerBase.prefill_order``: VTC/DLPM smallest counter,
+        Equinox smallest HF), so when the budget cannot cover everyone
+        the shortfall lands on the most-served client.
+
         Returns the per-request chunk plan ``[(req, chunk), ...]`` in
-        ``running`` order with every ``chunk > 0``, mutating
-        ``prefill_done`` — this single method is what makes simulator and
-        engine take identical chunking decisions (the engine executes the
-        plan against the model, the simulator only times it)."""
-        budget = self.cfg.prefill_chunk if self.cfg.stall_free else 1 << 30
+        fill order with every ``chunk > 0``, mutating ``prefill_done`` —
+        this single method is what makes simulator and engine take
+        identical chunking decisions (the engine executes the plan
+        against the model, the simulator only times it).  The budget
+        actually granted is recorded in ``last_prefill_budget`` and
+        mirrored to the observer's ``on_prefill_budget`` hook."""
+        cap = self.cfg.prefill_chunk if self.cfg.stall_free else 1 << 30
+        prefilling = [r for r in running
+                      if r.state == PREFILLING
+                      and r.prompt_len - r.prefill_done > 0]
+        budget = cap
+        if self.cfg.slo_budget == "auto":
+            order = self.sched.prefill_order(prefilling)
+            tbt = self.strictest_tbt(running)
+            if tbt is not None and order:
+                ctxs = [r.prompt_len + r.generated for r in running
+                        if r.state == DECODING]
+                budget = self.solve_prefill_budget(order, ctxs, tbt, cap)
+        else:
+            order = prefilling
+        self.last_prefill_budget = budget
+        if self.observer is not None and hasattr(self.observer,
+                                                 "on_prefill_budget"):
+            self.observer.on_prefill_budget(budget)
         plan: List[tuple] = []
-        for r in running:
-            if r.state == PREFILLING and budget > 0:
-                chunk = min(r.prompt_len - r.prefill_done, budget)
-                if chunk <= 0:
-                    continue
-                r.prefill_done += chunk
-                budget -= chunk
-                plan.append((r, chunk))
-                if self.observer is not None and hasattr(self.observer,
-                                                         "on_prefill_chunk"):
-                    self.observer.on_prefill_chunk(r, chunk)
+        for r in order:
+            if budget <= 0:
+                break
+            chunk = min(r.prompt_len - r.prefill_done, budget)
+            r.prefill_done += chunk
+            budget -= chunk
+            plan.append((r, chunk))
+            if self.observer is not None and hasattr(self.observer,
+                                                     "on_prefill_chunk"):
+                self.observer.on_prefill_chunk(r, chunk)
         return plan
 
     def prefix_match_len(self, tokens) -> int:

@@ -71,6 +71,7 @@ class ServingEngine:
                  chunked: Optional[bool] = None,
                  prefill_chunk_tokens: int = 512,
                  target_iter_time: float = 0.25,
+                 slo_budget: str = "static",
                  prefix_cache: bool = False,
                  keep_first_logits: bool = False,
                  observer=None):
@@ -98,6 +99,10 @@ class ServingEngine:
                         default_reserve=128,      # engine's legacy reserve
                         prefill_chunk=prefill_chunk_tokens,
                         target_iter_time=target_iter_time,
+                        # SLO-controllable per-iteration budget (§12);
+                        # the decisions live in BatchCore, so sim and
+                        # engine solve identically
+                        slo_budget=slo_budget,
                         # stall-free chunked prefill + adaptive batching
                         # when the model layer supports cache continuation
                         adaptive_batching=chunked,

@@ -1,12 +1,12 @@
-from repro.workloads.synthetic import (SCENARIOS, balanced, dynamic,
-                                       overload, stochastic)
+from repro.workloads.synthetic import (SCENARIOS, balanced, diurnal, dynamic,
+                                       overload, stochastic, tag_slo_classes)
 from repro.workloads.traces import (corpus, lmsys_like,
                                     multiturn_sharegpt_like, sharegpt_like,
                                     true_output_len)
 from repro.workloads.vocab import (TRACE_VOCAB, prompt_token_ids, stable_hash,
                                    token_id)
 
-__all__ = ["SCENARIOS", "balanced", "dynamic", "overload", "stochastic",
-           "corpus", "lmsys_like", "multiturn_sharegpt_like",
-           "sharegpt_like", "true_output_len", "TRACE_VOCAB",
-           "prompt_token_ids", "stable_hash", "token_id"]
+__all__ = ["SCENARIOS", "balanced", "diurnal", "dynamic", "overload",
+           "stochastic", "tag_slo_classes", "corpus", "lmsys_like",
+           "multiturn_sharegpt_like", "sharegpt_like", "true_output_len",
+           "TRACE_VOCAB", "prompt_token_ids", "stable_hash", "token_id"]

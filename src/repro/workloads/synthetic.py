@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.request import Request
+from repro.core.request import Request, set_slo
 
 _FILLER = ("please", "could", "explain", "about", "with", "using", "the",
            "details", "help", "me")
@@ -88,3 +88,77 @@ def dynamic(duration=60.0, seed=0):
 
 SCENARIOS = {"balanced": balanced, "stochastic": stochastic,
              "overload": overload, "dynamic": dynamic}
+
+
+# -- SLO-classed workloads (DESIGN.md §12) ------------------------------------
+def tag_slo_classes(reqs, interactive_frac: float = 0.5):
+    """Deterministically split a trace's clients into ``interactive``
+    and ``batch`` SLO classes (class targets from
+    ``repro.core.request.SLO_CLASSES``), in place.
+
+    Clients are sorted by name and interactive slots are spread evenly
+    across that order (not a prefix slice — ``client0..clientN`` sorts
+    lexicographically and a prefix would correlate class with the
+    generator's client index).  Tagging is per-*client*: a client's
+    whole stream shares one QoS contract, matching how serving tiers
+    are sold.  Returns ``reqs`` for chaining."""
+    if not 0.0 <= interactive_frac <= 1.0:
+        raise ValueError(f"interactive_frac must be in [0, 1], got "
+                         f"{interactive_frac}")
+    clients = sorted({r.client for r in reqs})
+    n_inter = int(round(len(clients) * interactive_frac))
+    inter = {c for i, c in enumerate(clients)
+             if ((i + 1) * n_inter) // len(clients)
+             > (i * n_inter) // len(clients)}
+    for r in reqs:
+        set_slo(r, "interactive" if r.client in inter else "batch")
+    return reqs
+
+
+def diurnal(duration=90.0, seed=0, n_interactive=6, n_batch=2,
+            base_rate=0.5, peak_mult=6.0, period=45.0,
+            batch_rate=0.3, batch_in=7000, batch_out=64):
+    """Bursty diurnal trace (DESIGN.md §12): ``n_interactive`` chat/QA
+    clients whose arrival rate follows a day/night sinusoid — each
+    client's rate swings from ``base_rate`` req/s in the trough to
+    ``base_rate * peak_mult`` at the peak of every ``period``-second
+    cycle (nonhomogeneous Poisson, sampled by thinning) — sharing the
+    machine with ``n_batch`` batch-class clients submitting
+    long-*input* summarization jobs (``batch_in`` prompt tokens,
+    ``batch_out`` output tokens) at a constant ``batch_rate``.  The mix
+    is built to expose the static prefill budget: chunking a
+    ``batch_in``-token prompt at 512 tokens/iteration stretches ~14
+    consecutive iterations past the interactive 40 ms TBT target —
+    long enough to blanket a short chat decode end to end — while the
+    SLO-auto budget shrinks chunks under interactive decodes and blasts
+    cap-size chunks in the windows without them.  Requests arrive
+    pre-tagged with their SLO class."""
+    rng = np.random.default_rng(seed)
+    reqs, rid = [], 0
+    rate_max = base_rate * peak_mult
+    for ci in range(n_interactive):
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / rate_max)
+            if t >= duration:
+                break
+            phase = 0.5 * (1.0 - np.cos(2.0 * np.pi * t / period))
+            rate = base_rate * (1.0 + (peak_mult - 1.0) * phase)
+            if rng.random() * rate_max > rate:      # thinned out
+                continue
+            kw = ("qa",) + tuple(rng.choice(_FILLER, size=2))
+            reqs.append(set_slo(Request(
+                rid=rid, client=f"inter{ci}", arrival=float(t),
+                prompt_len=int(rng.integers(24, 96)),
+                output_len=int(rng.integers(24, 80)), keywords=kw),
+                "interactive"))
+            rid += 1
+    for ci in range(n_batch):
+        jobs = _mk_requests(rng, f"batch{ci}", batch_rate, duration,
+                            batch_in, batch_out, poisson=True,
+                            rid_offset=100_000 + 10_000 * ci,
+                            keywords=("summarize",))
+        for r in jobs:
+            set_slo(r, "batch")
+        reqs += jobs
+    return sorted(reqs, key=lambda r: (r.arrival, r.rid))

@@ -26,6 +26,7 @@ import pytest
 
 from repro.configs import SMOKE_FACTORIES, get_config
 from repro.core import Request, SimConfig, Simulator, make_scheduler
+from repro.core.request import set_slo
 from repro.predictor import ScaledOracle
 from repro.serving.costmodel import A100_80G, CostModel
 from repro.serving.engine import ServingEngine
@@ -74,6 +75,7 @@ class Spy:
 
     def __init__(self):
         self.order, self.chunks, self.preempts = [], [], []
+        self.budgets, self.victim_classes = [], []
 
     def on_admit(self, req, now):
         self.order.append(req.rid)
@@ -81,8 +83,12 @@ class Spy:
     def on_prefill_chunk(self, req, chunk):
         self.chunks.append((req.rid, chunk))
 
+    def on_prefill_budget(self, budget):
+        self.budgets.append(budget)
+
     def on_preempt(self, req, now):
         self.preempts.append(req.rid)
+        self.victim_classes.append(req.slo_class)
 
     def on_complete(self, req, now, **kw):
         pass
@@ -157,3 +163,100 @@ def test_matrix_dimensions_not_vacuous():
     assert _totals["preempts"] > 0
     assert _totals["hits"] > 0
     assert _totals["chunked"] > 0
+
+
+# -- SLO dimension (DESIGN.md §12): {slo off, slo on} × fairness scheds -------
+# slo on = classed trace + slo_budget="auto" (budget solved per iteration,
+# fairness-ordered fill, class-aware victim pool); slo off = the same
+# requests untagged under the static budget — the pre-§12 behavior the
+# main grid pins.  Both sides of every cell must agree on the *budget
+# stream* too, not just its chunk consequences.
+SLO_SCHEDS = ("vtc", "equinox", "dlpm")
+SLO_CHUNK = 48
+# tight custom interactive TBT: with the smoke-model decode floor
+# (~15 ms incl. refresh overhead) an 18 ms target solves to mid-30s
+# budgets — strictly inside (0, SLO_CHUNK), so the auto dimension
+# provably moves the budget rather than saturating at the cap
+SLO_TBT = 0.018
+
+_slo_totals = {"cells": 0, "auto_budgets": set(), "preempts": 0,
+               "batch_victims": 0}
+
+
+def slo_trace():
+    """The matrix trace with client1 tagged interactive (tight custom
+    TBT) and client0 batch-class."""
+    reqs = matrix_trace()
+    for r in reqs:
+        if r.client == "client1":
+            set_slo(r, "interactive", tbt=SLO_TBT)
+        else:
+            set_slo(r, "batch")
+    return reqs
+
+
+@pytest.mark.parametrize("slo", (False, True), ids=("slo_off", "slo_on"))
+@pytest.mark.parametrize("sched", SLO_SCHEDS)
+def test_slo_parity_cell(cm, sched, slo):
+    mode = "auto" if slo else "static"
+    trace = slo_trace() if slo else matrix_trace()
+    kvb = KV_BUDGET[False]
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+
+    espy = Spy()
+    eng = ServingEngine(cfg, _sched(sched, "fair", cm), max_slots=4,
+                        max_len=96, kv_budget_tokens=kvb, cost_model=cm,
+                        backend="paged", page_size=16, chunked=True,
+                        prefill_chunk_tokens=SLO_CHUNK, slo_budget=mode,
+                        observer=espy)
+    done = eng.run([dataclasses.replace(r) for r in trace])
+    assert len(done) == N_REQ
+    assert all(r.generated == r.output_len for r in done)
+
+    sspy = Spy()
+    sim = Simulator(cm, _sched(sched, "fair", cm),
+                    SimConfig(max_batch=4, kv_budget_tokens=kvb,
+                              default_reserve=128, prefill_chunk=SLO_CHUNK,
+                              stall_free=True, adaptive_batching=True,
+                              kv_page_size=16, slo_budget=mode),
+                    observer=sspy)
+    res = sim.run([dataclasses.replace(r) for r in trace])
+    assert all(r.state == "finished" for r in res.requests)
+
+    assert espy.order == sspy.order          # identical admissions
+    assert espy.budgets == sspy.budgets      # identical budget stream
+    assert espy.chunks == sspy.chunks        # identical chunk plans
+    assert espy.preempts == sspy.preempts    # identical victims, in order
+    assert eng.n_preemptions == sim.n_preemptions
+    e = {r.rid: r for r in done}
+    s = {r.rid: r for r in res.requests}
+    for rid in e:
+        assert e[rid].n_preempted == s[rid].n_preempted
+        assert e[rid].ttft() == pytest.approx(s[rid].ttft(), abs=1e-9)
+        assert e[rid].e2e_latency() == pytest.approx(
+            s[rid].e2e_latency(), abs=1e-9)
+
+    if not slo:
+        # static budget: the recorded stream is the constant cap
+        assert set(espy.budgets) <= {SLO_CHUNK}
+    else:
+        _slo_totals["auto_budgets"] |= set(espy.budgets)
+    _slo_totals["preempts"] += len(espy.preempts)
+    _slo_totals["batch_victims"] += sum(c == "batch"
+                                        for c in espy.victim_classes)
+    _slo_totals["cells"] += 1
+
+
+def test_slo_dimension_not_vacuous():
+    """Runs after the SLO grid: the auto arm genuinely moved the budget
+    (several distinct values, some strictly inside (0, cap)), the trace
+    still preempted, and the class-aware victim pool made batch-class
+    requests absorb over-commit."""
+    if _slo_totals["cells"] < len(SLO_SCHEDS) * 2:
+        pytest.skip(f"only {_slo_totals['cells']}/{len(SLO_SCHEDS) * 2} "
+                    "SLO grid cells ran in this process (selective run)")
+    moved = {b for b in _slo_totals["auto_budgets"] if 0 < b < SLO_CHUNK}
+    assert len(_slo_totals["auto_budgets"]) >= 2
+    assert moved, "auto budgets only ever saturated at 0 or the cap"
+    assert _slo_totals["preempts"] > 0
+    assert _slo_totals["batch_victims"] > 0

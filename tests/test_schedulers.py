@@ -261,3 +261,34 @@ def test_make_scheduler_valid_victim_and_omega_still_accepted():
     assert s.victim_policy == "lifo" and s.omega_cached == 0.5
     d = make_scheduler("dlpm", quantum=2048)
     assert d.quantum == 2048.0 and d.name == "dlpm"
+
+
+# -- BatchConfig user-input validation (regression: silently accepted) ---------
+@pytest.mark.parametrize("kw", [
+    dict(prefill_chunk=0),      # starved every prefill under stall_free
+    dict(prefill_chunk=-512),
+    dict(prefill_chunk=None),
+    dict(kv_page_size=0),       # masked by BatchCore's max(ps, 1) fallback
+    dict(kv_page_size=-16),
+    dict(kv_page_size=None),
+    dict(slo_budget="adaptive"),
+    dict(slo_budget=""),
+])
+def test_batch_config_rejects_bad_input_with_valueerror(kw):
+    """``BatchConfig(prefill_chunk=0)`` used to construct fine and hang
+    the suite (stall-free admission stays work-conserving while no
+    prefill ever advances); non-positive ``kv_page_size`` was silently
+    floored to 1, diverging from what the paged pool would honor.  Same
+    contract as make_scheduler: ``ValueError`` from ``__post_init__``,
+    never a bare assert."""
+    from repro.serving.batch_core import BatchConfig
+    with pytest.raises(ValueError):
+        BatchConfig(**kw)
+
+
+def test_batch_config_valid_inputs_still_accepted():
+    from repro.serving.batch_core import BatchConfig
+    cfg = BatchConfig(prefill_chunk=256, kv_page_size=16,
+                      slo_budget="auto")
+    assert (cfg.prefill_chunk, cfg.kv_page_size, cfg.slo_budget) \
+        == (256, 16, "auto")

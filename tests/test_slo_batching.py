@@ -1,0 +1,274 @@
+"""SLO-controllable batch formation (DESIGN.md §12).
+
+Property layer over ``BatchCore.solve_prefill_budget`` — the invariants
+the budget solver must hold for *any* decode batch and SLO mix, checked
+three ways:
+
+- hypothesis properties (skipped cleanly when hypothesis is missing,
+  via ``tests/_hypothesis_compat``);
+- a seeded random-walk driver exercising the same invariants without
+  hypothesis, so a bare runtime checkout still tests them;
+- unit tests for the SLO victim pool, the scheduler ``prefill_order``
+  hooks, and the end-to-end auto-budget simulator behavior.
+
+The invariants (docstring of ``solve_prefill_budget``):
+
+1. ``0 <= B <= min(cap, total remaining prefill)``;
+2. monotone non-increasing in decode batch size (more decodes never
+   buy a bigger chunk budget);
+3. monotone non-increasing in SLO strictness (a tighter TBT target
+   never buys a bigger budget);
+4. any ``B > 0`` keeps the planned mixed iteration within the target.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.configs import get_config
+from repro.core import SimConfig, Simulator, make_scheduler
+from repro.core.request import (DECODING, FINISHED, PREFILLING, SLO_CLASSES,
+                                Request, set_slo)
+from repro.predictor import Oracle
+from repro.serving.batch_core import BatchConfig, BatchCore
+from repro.serving.costmodel import A100_80G, CostModel
+
+CM = CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def _core(cap=2048):
+    return BatchCore(make_scheduler("fcfs"), CM,
+                     BatchConfig(prefill_chunk=cap, slo_budget="auto"))
+
+
+def _prefilling(prompt_lens, done=0):
+    reqs = []
+    for i, p in enumerate(prompt_lens):
+        r = Request(rid=i, client=f"c{i % 2}", arrival=0.0, prompt_len=p,
+                    output_len=8, keywords=("qa",))
+        r.state = PREFILLING
+        r.prefill_done = min(done, p - 1)
+        reqs.append(r)
+    return reqs
+
+
+def _check_invariants(core, order, ctxs, tbt, cap):
+    """The four solver invariants at one operating point."""
+    b = core.solve_prefill_budget(order, ctxs, tbt, cap)
+    total = sum(r.prompt_len - r.prefill_done for r in order)
+    assert 0 <= b <= min(cap, total)                          # (1)
+    b_more_decodes = core.solve_prefill_budget(
+        order, list(ctxs) + [max(ctxs, default=256)], tbt, cap)
+    assert b_more_decodes <= b                                 # (2)
+    b_stricter = core.solve_prefill_budget(order, ctxs, tbt * 0.5, cap)
+    assert b_stricter <= b                                     # (3)
+    if b > 0:
+        assert core._planned_step_time(order, ctxs, b) <= tbt  # (4)
+    return b
+
+
+# -- hypothesis properties ----------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(prompts=st.lists(st.integers(min_value=1, max_value=4096),
+                        min_size=0, max_size=6),
+       n_decode=st.integers(min_value=0, max_value=48),
+       ctx=st.integers(min_value=1, max_value=4096),
+       tbt=st.floats(min_value=0.005, max_value=1.0),
+       cap=st.integers(min_value=1, max_value=4096))
+def test_budget_solver_invariants_hypothesis(prompts, n_decode, ctx, tbt,
+                                             cap):
+    core = _core(cap)
+    _check_invariants(core, _prefilling(prompts), [ctx] * n_decode, tbt,
+                      cap)
+
+
+@settings(max_examples=30, deadline=None)
+@given(prompts=st.lists(st.integers(min_value=64, max_value=2048),
+                        min_size=1, max_size=4),
+       sizes=st.lists(st.integers(min_value=0, max_value=40),
+                      min_size=2, max_size=6))
+def test_budget_monotone_along_decode_batch_growth(prompts, sizes):
+    """Full monotone chain: sorting the decode batch sizes, the solved
+    budgets must be non-increasing along the chain (property 2 globally,
+    not just +1 step)."""
+    core = _core(1024)
+    order = _prefilling(prompts)
+    budgets = [core.solve_prefill_budget(order, [512] * n, 0.05, 1024)
+               for n in sorted(sizes)]
+    assert budgets == sorted(budgets, reverse=True)
+
+
+# -- seeded random walk (runs without hypothesis) -----------------------------
+def test_budget_solver_invariants_random_walk():
+    rng = np.random.default_rng(42)
+    core = _core()
+    n_positive = 0
+    for _ in range(300):
+        cap = int(rng.integers(1, 4096))
+        order = _prefilling(list(rng.integers(1, 4096,
+                                              size=rng.integers(0, 6))))
+        ctxs = list(rng.integers(1, 4096, size=rng.integers(0, 48)))
+        tbt = float(rng.uniform(0.005, 1.0))
+        n_positive += _check_invariants(core, order, ctxs, tbt, cap) > 0
+    # non-vacuous: the walk hit both feasible and throttled regimes
+    assert 0 < n_positive < 300
+
+
+def test_budget_exact_at_boundary():
+    """The binary search is exact: B is feasible, B+1 is not (when the
+    solve lands strictly inside (0, cap))."""
+    core = _core(4096)
+    order = _prefilling([4096])
+    ctxs = [1024] * 16
+    tbt = 0.04
+    b = core.solve_prefill_budget(order, ctxs, tbt, 4096)
+    assert 0 < b < 4096
+    assert core._planned_step_time(order, ctxs, b) <= tbt
+    assert core._planned_step_time(order, ctxs, b + 1) > tbt
+
+
+def test_budget_zero_when_decode_alone_busts_target():
+    core = _core()
+    assert core.solve_prefill_budget(_prefilling([512]), [2048] * 48,
+                                     0.001, 2048) == 0
+
+
+def test_strictest_tbt_ignores_prefilling():
+    core = _core()
+    a, b = _prefilling([64, 64])
+    set_slo(a, "interactive")           # PREFILLING: TTFT clock, not TBT
+    set_slo(b, "batch")
+    b.state = DECODING
+    assert core.strictest_tbt([a, b]) == SLO_CLASSES["batch"].tbt
+    a.state = DECODING
+    assert core.strictest_tbt([a, b]) == SLO_CLASSES["interactive"].tbt
+    assert core.strictest_tbt(_prefilling([64])) is None
+
+
+# -- SLO victim pool (composes with §10 select_victim) ------------------------
+def _decoding(rid, client, slo=None, now=0.0, tbt_blown=False):
+    r = Request(rid=rid, client=client, arrival=0.0, prompt_len=32,
+                output_len=64, keywords=("qa",))
+    if slo is not None:
+        set_slo(r, slo)
+    r.state = DECODING
+    r.first_token_time = 0.0
+    # mean TBT so far is now / (generated - 1): blown -> one slow token;
+    # healthy -> enough tokens that the mean sits at half the target
+    if slo is not None and now > 0:
+        r.generated = 2 if tbt_blown else int(2 * now / r.tbt_slo) + 2
+    else:
+        r.generated = 10
+    return r
+
+
+def test_victim_pool_passthrough_without_classes():
+    cands = [_decoding(0, "a"), _decoding(1, "b")]
+    assert BatchCore.slo_victim_pool(cands, 1.0) == cands
+
+
+def test_victim_pool_passthrough_single_class():
+    inter = [_decoding(0, "a", "interactive"), _decoding(1, "b",
+                                                         "interactive")]
+    assert BatchCore.slo_victim_pool(inter, 1.0) == inter
+    batch = [_decoding(0, "a", "batch"), _decoding(1, "b", "batch")]
+    assert BatchCore.slo_victim_pool(batch, 1.0) == batch
+
+
+def test_victim_pool_prefers_batch_class():
+    i = _decoding(0, "a", "interactive")
+    b = _decoding(1, "b", "batch")
+    assert BatchCore.slo_victim_pool([i, b], 1.0) == [b]
+
+
+def test_victim_pool_prefers_violating_batch_victims():
+    now = 100.0
+    ok = _decoding(1, "b", "batch", now=now)
+    blown = _decoding(2, "c", "batch", now=now, tbt_blown=True)
+    i = _decoding(0, "a", "interactive", now=now)
+    assert blown.slo_violating(now) and not ok.slo_violating(now)
+    assert BatchCore.slo_victim_pool([i, ok, blown], now) == [blown]
+
+
+# -- scheduler prefill_order hooks --------------------------------------------
+def test_prefill_order_base_keeps_admission_order():
+    sched = make_scheduler("fcfs")
+    reqs = _prefilling([64, 64, 64])
+    assert sched.prefill_order(reqs) == reqs
+
+
+def test_prefill_order_vtc_least_served_first():
+    sched = make_scheduler("vtc")
+    reqs = _prefilling([64, 64])       # clients c0, c1
+    sched.counter.update(c0=100.0, c1=1.0)
+    assert [r.client for r in sched.prefill_order(reqs)] == ["c1", "c0"]
+
+
+def test_prefill_order_equinox_smallest_hf_first():
+    sched = make_scheduler("equinox", predictor=Oracle(CM))
+    reqs = _prefilling([64, 64])
+    sched.ufc.update(c0=50.0, c1=2.0)
+    sched.rfc.update(c0=0.0, c1=0.0)
+    assert [r.client for r in sched.prefill_order(reqs)] == ["c1", "c0"]
+
+
+# -- SLO class plumbing -------------------------------------------------------
+def test_set_slo_rejects_unknown_class():
+    r = _prefilling([64])[0]
+    with pytest.raises(ValueError):
+        set_slo(r, "premium")
+
+
+def test_set_slo_defaults_and_overrides():
+    r = set_slo(_prefilling([64])[0], "interactive")
+    assert (r.ttft_slo, r.tbt_slo) == (SLO_CLASSES["interactive"].ttft,
+                                       SLO_CLASSES["interactive"].tbt)
+    r2 = set_slo(_prefilling([64])[0], "batch", tbt=0.1)
+    assert r2.tbt_slo == 0.1 and r2.ttft_slo == SLO_CLASSES["batch"].ttft
+
+
+# -- end to end: the auto budget delivers the target --------------------------
+def _slo_trace(seed=11):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(10):                 # interactive chat stream
+        reqs.append(set_slo(Request(
+            rid=i, client="chat", arrival=0.3 * i,
+            prompt_len=int(rng.integers(24, 64)),
+            output_len=int(rng.integers(24, 64)), keywords=("qa",)),
+            "interactive"))
+    for i in range(6):                  # long-prompt batch jobs
+        reqs.append(set_slo(Request(
+            rid=100 + i, client="jobs", arrival=0.5 * i, prompt_len=8000,
+            output_len=32, keywords=("summarize",)), "batch"))
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def _run(mode, cap):
+    sim = Simulator(CM, make_scheduler("vtc"),
+                    SimConfig(max_batch=16, kv_budget_tokens=40_000,
+                              prefill_chunk=cap, slo_budget=mode))
+    return sim.run(_slo_trace())
+
+
+def test_auto_budget_protects_interactive_tbt_end_to_end():
+    res = _run("auto", 2048)
+    assert all(r.state == FINISHED for r in res.requests)
+    inter = [r for r in res.requests if r.slo_class == "interactive"]
+    assert inter and all(r.tbt_met() for r in inter if r.tbt_met()
+                         is not None)
+    # the budget actually moved: throttled under interactive decodes,
+    # cap-sized without them
+    budgets = {b for b in res.timeline.budget if b is not None}
+    assert len(budgets) >= 2 and max(budgets) == 2048
+    assert min(b for b in budgets if b > 0) < 512
+
+
+def test_static_budget_violates_what_auto_protects():
+    """The same trace under the static 512 budget misses interactive
+    TBT — the violation the benchmark gate measures, pinned here at
+    test scale so the benchmark can't drift into vacuity."""
+    res = _run("static", 512)
+    inter = [r for r in res.requests if r.slo_class == "interactive"]
+    met = [r.tbt_met() for r in inter if r.tbt_met() is not None]
+    assert not all(met)
+    assert set(res.timeline.budget) == {512}

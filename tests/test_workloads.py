@@ -130,3 +130,60 @@ def test_multiturn_arrivals_ordered_and_output_structure():
     assert (np.diff(arr) >= 0).all()
     assert all(r.output_len >= 1 for r in reqs)
     assert all(r.keywords for r in reqs)          # predictor features intact
+
+
+# -- SLO-classed workloads (DESIGN.md §12) ------------------------------------
+def test_diurnal_deterministic_and_tagged():
+    from repro.workloads import diurnal
+
+    a = diurnal(duration=30.0, seed=4)
+    b = diurnal(duration=30.0, seed=4)
+    assert [(r.rid, r.arrival, r.prompt_len, r.output_len, r.slo_class)
+            for r in a] == \
+           [(r.rid, r.arrival, r.prompt_len, r.output_len, r.slo_class)
+            for r in b]
+    arr = np.array([r.arrival for r in a])
+    assert (np.diff(arr) >= 0).all()
+    classes = {r.slo_class for r in a}
+    assert classes == {"interactive", "batch"}
+    for r in a:                        # every request carries its targets
+        assert r.ttft_slo is not None and r.tbt_slo is not None
+
+
+def test_diurnal_rate_is_bursty():
+    """Arrivals in a peak half-cycle far outnumber the trough's: the
+    sinusoidal thinning actually modulates the interactive rate."""
+    from repro.workloads import diurnal
+
+    reqs = [r for r in diurnal(duration=60.0, seed=0, period=60.0,
+                               base_rate=1.0, peak_mult=8.0)
+            if r.slo_class == "interactive"]
+    trough = sum(1 for r in reqs if r.arrival < 15.0 or r.arrival > 45.0)
+    peak = sum(1 for r in reqs if 15.0 <= r.arrival <= 45.0)
+    assert peak > 2.5 * trough
+
+
+def test_diurnal_batch_class_is_prefill_heavy():
+    from repro.workloads import diurnal
+
+    reqs = diurnal(duration=30.0, seed=1)
+    batch = [r for r in reqs if r.slo_class == "batch"]
+    inter = [r for r in reqs if r.slo_class == "interactive"]
+    assert batch and inter
+    assert min(r.prompt_len for r in batch) > 10 * max(r.prompt_len
+                                                       for r in inter)
+
+
+def test_tag_slo_classes_even_split_and_validation():
+    from repro.workloads import tag_slo_classes
+
+    reqs = multiturn_sharegpt_like(n_clients=6, n_conversations=1, seed=0)
+    tag_slo_classes(reqs)
+    per_client = {r.client: r.slo_class for r in reqs}
+    assert sum(c == "interactive" for c in per_client.values()) == 3
+    # class is per client, not per request
+    for r in reqs:
+        assert r.slo_class == per_client[r.client]
+    import pytest
+    with pytest.raises(ValueError):
+        tag_slo_classes(reqs, interactive_frac=1.5)
