@@ -1,0 +1,170 @@
+"""Overload-aware admission control (DESIGN.md §13).
+
+Throttled vs unthrottled serving under ~3× overload — offered load
+roughly triple what the replica's KV budget and batch cap can drain —
+on two traces:
+
+- **closed-loop multiturn** — first-class ``Interaction`` objects
+  (``workloads.multiturn_interactions``) with skewed demand: every
+  other user is "chatty" (5× the sessions).  Turn k+1 only arrives
+  after turn k completes plus think time, so rejecting a conversation
+  start genuinely removes its future turns from the offered load.
+  Without admission control the replica accepts every session, over-
+  commits KV, and preemption recompute burns capacity while chatty
+  users hog delivered tokens; with it, the per-user/per-app sliding
+  windows clip exactly the chatty users' session starts once the
+  replica is overloaded (in-flight turns always pass — their KV and
+  prefix-cache investment is sunk).
+- **open-loop diurnal** — ``workloads.diurnal`` at ~3× sustained
+  overload with under-reserved KV (``default_reserve`` far below true
+  decode lengths), so the unthrottled arm preempts long batch prompts
+  mid-flight and recomputes them.  Open-loop arrivals keep coming
+  whether or not earlier requests were admitted, so here admission
+  cannot raise goodput — it trades goodput for (near-)zero wasted
+  recompute.  The gate on this trace is therefore waste-only; the
+  strict goodput gate applies to the closed-loop trace, matching the
+  ISSUE 7 acceptance criterion.
+
+Reported per arm: goodput (delivered weighted tok/s over sim time),
+wasted tokens (preemption recompute + horizon-unfinished compute),
+throttle count, and delivered-token Jain (throttled accounts count as
+zero service — admission cannot look fairer by rejecting accounts).
+
+Gates: on the closed-loop multiturn trace the throttled arm must have
+strictly higher goodput AND strictly fewer wasted tokens at
+equal-or-better delivered Jain; on the diurnal trace it must have
+strictly fewer wasted tokens.  Both arms must actually throttle > 0
+interactions for the comparison to be meaningful.
+
+    PYTHONPATH=src python benchmarks/overload_admission.py [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core import SimConfig, Simulator, delivered_jain, make_scheduler
+from repro.serving.admission import AdmissionConfig
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import diurnal, multiturn_interactions
+
+CM = CostModel(get_config("llama2-7b"), A100_80G)
+
+FULL = dict(
+    multiturn=dict(
+        trace=dict(n_users=8, n_apps=2, sessions_per_user=(2, 10),
+                   session_gap=0.5, think_time=0.5, seed=7),
+        adm=dict(window_s=30.0, user_rate=3.0, app_rate=12.0,
+                 kv_thresh=0.7, queue_thresh=0.3),
+        sim=dict(max_batch=8, kv_budget_tokens=6_000, default_reserve=64,
+                 max_time=400.0)),
+    diurnal=dict(
+        trace=dict(duration=60.0, seed=7, n_interactive=8, n_batch=2,
+                   base_rate=1.0, peak_mult=6.0, period=30.0,
+                   batch_rate=0.5, batch_in=4000, batch_out=256),
+        adm=dict(window_s=20.0, user_rate=20.0, app_rate=40.0,
+                 kv_thresh=0.7, queue_thresh=0.3),
+        sim=dict(max_batch=8, kv_budget_tokens=5_000, default_reserve=16,
+                 max_time=150.0)))
+SMOKE = dict(
+    multiturn=dict(
+        trace=dict(n_users=6, n_apps=2, sessions_per_user=(2, 10),
+                   session_gap=0.5, think_time=0.5, seed=3),
+        adm=dict(window_s=30.0, user_rate=3.0, app_rate=9.0,
+                 kv_thresh=0.7, queue_thresh=0.3),
+        sim=dict(max_batch=8, kv_budget_tokens=6_000, default_reserve=64,
+                 max_time=400.0)),
+    diurnal=dict(
+        trace=dict(duration=40.0, seed=3, n_interactive=6, n_batch=2,
+                   base_rate=1.0, peak_mult=6.0, period=20.0,
+                   batch_rate=0.5, batch_in=4000, batch_out=256),
+        adm=dict(window_s=20.0, user_rate=20.0, app_rate=40.0,
+                 kv_thresh=0.7, queue_thresh=0.3),
+        sim=dict(max_batch=8, kv_budget_tokens=5_000, default_reserve=16,
+                 max_time=100.0)))
+
+
+def _serve(tp, trace_name: str, throttled: bool):
+    """One simulator run of one arm on one trace."""
+    adm = AdmissionConfig(**tp["adm"]) if throttled else None
+    sim = Simulator(CM, make_scheduler("vtc"), SimConfig(**tp["sim"]),
+                    admission=adm)
+    t0 = time.monotonic()
+    if trace_name == "multiturn":
+        res = sim.run(interactions=multiturn_interactions(**tp["trace"]))
+    else:
+        res = sim.run(diurnal(**tp["trace"]))
+    wall = time.monotonic() - t0
+    m = dict(goodput=res.goodput_tokens_per_s(),
+             wasted=res.wasted_tokens(),
+             n_throttled=res.n_throttled,
+             jain=delivered_jain(res.requests),
+             finished=sum(r.state == "finished" for r in res.requests),
+             total=len(res.requests),
+             preempts=sim.n_preemptions)
+    return m, wall
+
+
+def run(quick: bool = False):
+    params = SMOKE if quick else FULL
+    out, gates = [], []
+    for trace_name in ("multiturn", "diurnal"):
+        tp = params[trace_name]
+        arms = {}
+        for arm in ("unthrottled", "throttled"):
+            m, wall = _serve(tp, trace_name, throttled=(arm == "throttled"))
+            arms[arm] = m
+            out.append(
+                f"overload_admission/{trace_name}_{arm},{wall * 1e6:.0f},"
+                f"goodput={m['goodput']:.0f}tok/s "
+                f"wasted={m['wasted']:.0f}tok "
+                f"throttled={m['n_throttled']} "
+                f"jain_delivered={m['jain']:.3f} "
+                f"finished={m['finished']}/{m['total']} "
+                f"preempts={m['preempts']}")
+        th, un = arms["throttled"], arms["unthrottled"]
+        if trace_name == "multiturn":        # strict closed-loop gate
+            ok = (th["goodput"] > un["goodput"]
+                  and th["wasted"] < un["wasted"]
+                  and th["jain"] >= un["jain"]
+                  and th["n_throttled"] > 0)
+        else:                                # open-loop: waste-only gate
+            ok = th["wasted"] < un["wasted"] and th["n_throttled"] > 0
+        gates.append(ok)
+        out.append(
+            f"overload_admission/{trace_name}_gate,0,"
+            f"goodput_thr={th['goodput']:.0f} goodput_un={un['goodput']:.0f} "
+            f"wasted_thr={th['wasted']:.0f} wasted_un={un['wasted']:.0f} "
+            f"jain_thr={th['jain']:.3f} jain_un={un['jain']:.3f} ok={ok}")
+    out.append(f"overload_admission/summary,0,ok={all(gates)}")
+    return out
+
+
+def main():
+    import argparse
+
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import write_bench_json
+    except ImportError:                    # python benchmarks/overload_admission.py
+        from common import write_bench_json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces for CI (<1 min)")
+    args = ap.parse_args()
+    lines = run(quick=args.smoke)
+    for line in lines:
+        print(line, flush=True)
+    write_bench_json("overload_admission", lines, {"smoke": args.smoke})
+    ok = lines[-1].rsplit("ok=", 1)[-1] == "True"
+    if not ok:
+        raise SystemExit(
+            "overload_admission failed its gates: under ~3x overload, "
+            "admission control must deliver strictly higher goodput and "
+            "strictly fewer wasted tokens at equal-or-better delivered "
+            "Jain on the closed-loop multiturn trace, and strictly fewer "
+            "wasted tokens on the open-loop diurnal trace")
+
+
+if __name__ == "__main__":
+    main()

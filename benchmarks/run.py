@@ -36,6 +36,8 @@ BENCHES = [
                           "d2lpm routing on the multiturn trace"),
     ("slo_attainment", "DESIGN.md §12: SLO-auto per-iteration prefill "
                        "budgets vs static chunking, TTFT/TBT attainment"),
+    ("overload_admission", "DESIGN.md §13: overload-aware admission — "
+                           "throttled vs unthrottled under 3x overload"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),

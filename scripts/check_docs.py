@@ -6,7 +6,11 @@ Fails (exit 1) if:
   missing DESIGN.md or a section number DESIGN.md does not define
   (sections are `## N. Title` headings);
 - any relative markdown link in a root-level .md file points at a
-  missing file or directory.
+  missing file or directory;
+- any `benchmarks/*.py` module is missing from the `BENCHES` registry
+  in `benchmarks/run.py` (or registered but missing on disk) — an
+  unregistered benchmark silently escapes the CI artifact upload and
+  the determinism pin (`tests/test_bench_determinism.py`).
 
     python scripts/check_docs.py
 """
@@ -68,10 +72,32 @@ def check_markdown_links(errors):
                 errors.append(f"{md.name}:{line}: broken link -> {target}")
 
 
+BENCH_ENTRY_RE = re.compile(r"^\s*\(\"([a-z0-9_]+)\",", re.M)
+# infrastructure modules, not benchmarks — exempt from registration
+BENCH_HELPERS = {"run", "common", "__init__"}
+
+
+def check_bench_registry(errors):
+    run_py = ROOT / "benchmarks" / "run.py"
+    if not run_py.exists():
+        return
+    registered = set(BENCH_ENTRY_RE.findall(run_py.read_text()))
+    on_disk = {p.stem for p in (ROOT / "benchmarks").glob("*.py")
+               if p.stem not in BENCH_HELPERS}
+    for name in sorted(on_disk - registered):
+        errors.append(f"benchmarks/{name}.py: not registered in "
+                      "benchmarks/run.py BENCHES — it will escape the CI "
+                      "artifact upload and the determinism pin")
+    for name in sorted(registered - on_disk):
+        errors.append(f"benchmarks/run.py: BENCHES entry {name!r} has no "
+                      f"benchmarks/{name}.py on disk")
+
+
 def main() -> int:
     errors: list[str] = []
     check_section_citations(errors)
     check_markdown_links(errors)
+    check_bench_registry(errors)
     if errors:
         print(f"check_docs: {len(errors)} broken cross-reference(s)")
         for e in errors:

@@ -4,17 +4,18 @@ and the discrete-event continuous-batching simulator."""
 from repro.core.counters import (DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DELTA,
                                  OUT_TOKEN_WEIGHT, HFParams, hf_scores,
                                  rfc_increment, select_min_hf, ufc_increment)
-from repro.core.metrics import (HFObserver, jain, service_difference_stats,
-                                summarize)
-from repro.core.request import Request, SLO_CLASSES, SLOTarget, set_slo
+from repro.core.metrics import (HFObserver, delivered_jain, jain,
+                                service_difference_stats, summarize)
+from repro.core.request import (Interaction, Request, SLO_CLASSES, SLOTarget,
+                                set_slo)
 from repro.core.schedulers import (DLPM, FCFS, RPM, VTC, Equinox,
                                    SchedulerBase, make_scheduler)
 from repro.core.simulator import SimConfig, SimResult, Simulator
 
 __all__ = ["DEFAULT_ALPHA", "DEFAULT_BETA", "DEFAULT_DELTA",
            "OUT_TOKEN_WEIGHT", "HFParams", "hf_scores", "rfc_increment",
-           "select_min_hf", "ufc_increment", "HFObserver", "jain",
-           "service_difference_stats", "summarize", "Request",
-           "SLO_CLASSES", "SLOTarget", "set_slo", "DLPM",
+           "select_min_hf", "ufc_increment", "HFObserver", "delivered_jain",
+           "jain", "service_difference_stats", "summarize", "Interaction",
+           "Request", "SLO_CLASSES", "SLOTarget", "set_slo", "DLPM",
            "FCFS", "RPM", "VTC", "Equinox", "SchedulerBase",
            "make_scheduler", "SimConfig", "SimResult", "Simulator"]

@@ -19,7 +19,9 @@ from repro.core.request import Request
 
 
 class HFObserver:
-    """Accumulates UFC/RFC per client from actual post-execution metrics."""
+    """Accumulates UFC/RFC per fairness account (``Request.account`` —
+    the session name for flat traces, user@app for interactions,
+    DESIGN.md §13) from actual post-execution metrics."""
 
     def __init__(self, params: C.HFParams = C.HFParams()):
         self.p = params
@@ -27,17 +29,17 @@ class HFObserver:
         self.rfc: Dict[str, float] = {}
 
     def on_admit(self, req: Request, now: float):
-        self.ufc.setdefault(req.client, 0.0)
-        self.rfc.setdefault(req.client, 0.0)
+        self.ufc.setdefault(req.account, 0.0)
+        self.rfc.setdefault(req.account, 0.0)
 
     def on_complete(self, req: Request, now: float, *, latency: float,
                     tps: float, util: float):
         """``latency`` is GPU execution time (queue wait excluded)."""
         wait = max((req.admit_time or req.arrival) - req.arrival, 0.0)
-        self.ufc[req.client] = self.ufc.get(req.client, 0.0) \
+        self.ufc[req.account] = self.ufc.get(req.account, 0.0) \
             + C.ufc_increment(req.prompt_len, req.generated, wait, latency,
                               req.weight, self.p.delta)
-        self.rfc[req.client] = self.rfc.get(req.client, 0.0) \
+        self.rfc[req.account] = self.rfc.get(req.account, 0.0) \
             + C.rfc_increment(tps, util, req.weight)
 
     def hf(self) -> Dict[str, float]:
@@ -54,21 +56,46 @@ class HFObserver:
 
 
 def jain(xs) -> float:
+    """Jain's index over non-NaN scores.  Empty or all-zero input means
+    no client got *differential* treatment — return the perfectly-fair
+    1.0 rather than 0/0 (a fully-throttled run is uniformly bad, not
+    unfair)."""
     xs = np.asarray([x for x in xs if np.isfinite(x)], float)
     if len(xs) == 0 or np.all(xs == 0):
         return 1.0
     return float(xs.sum() ** 2 / (len(xs) * np.sum(xs ** 2)))
 
 
+def delivered_jain(requests) -> float:
+    """Jain over *delivered* weighted tokens per fairness account
+    (DESIGN.md §13).  Unlike ``SimResult.jain_index`` (which drops
+    zero-score clients), every account that showed up is a population
+    member: throttled or starved accounts contribute an explicit 0 —
+    the PR 5 starvation convention — so admission control cannot
+    improve its Jain by rejecting whole accounts."""
+    delivered: Dict[str, float] = {}
+    for r in requests:
+        delivered.setdefault(r.account, 0.0)
+        if r.state == "finished":
+            delivered[r.account] += (r.prompt_len
+                                     + C.OUT_TOKEN_WEIGHT * r.generated)
+    return jain(list(delivered.values()))
+
+
 def service_difference_stats(result, c1: str, c2: str,
                              settle: float = 0.1) -> dict:
     """Max/avg/var of |service_1 - service_2| (Table 1), skipping the
-    initial ``settle`` fraction while both clients ramp up."""
+    initial ``settle`` fraction while both clients ramp up.  Degenerate
+    inputs (no samples at all, or a settle slice that consumes every
+    sample — e.g. both clients fully throttled) report zeros instead of
+    raising on an empty array."""
     ts, diff = result.service_difference(c1, c2)
     if len(diff) == 0:
         return {"max": 0.0, "avg": 0.0, "var": 0.0}
     k = int(len(diff) * settle)
     d = diff[k:]
+    if len(d) == 0:
+        d = diff[-1:]            # settle swallowed everything: last sample
     return {"max": float(d.max()), "avg": float(d.mean()),
             "var": float(d.var())}
 
@@ -85,6 +112,18 @@ def summarize(result, clients: List[str] = None) -> dict:
         "finished": sum(r.state == "finished" for r in result.requests),
         "total": len(result.requests),
     }
+    # admission-control metrics (DESIGN.md §13) — only results that
+    # carry them (SimResult/ClusterResult post-§13); getattr-guarded so
+    # older result shims keep working
+    goodput = getattr(result, "goodput_tokens_per_s", None)
+    if callable(goodput):
+        out["goodput_tok_s"] = goodput()
+    wasted = getattr(result, "wasted_tokens", None)
+    if callable(wasted):
+        out["wasted_tokens"] = wasted()
+    out["n_throttled"] = sum(r.state == "throttled"
+                             for r in result.requests)
+    out["jain_delivered"] = delivered_jain(result.requests)
     if clients and len(clients) >= 2:
         out["service_diff"] = service_difference_stats(result, clients[0],
                                                        clients[1])

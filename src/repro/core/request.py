@@ -3,7 +3,7 @@ schedulers."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -14,6 +14,8 @@ DECODING = "decoding"
 FINISHED = "finished"
 DROPPED = "dropped"
 PREEMPTED = "preempted"     # evicted from the batch (recompute on re-admit)
+THROTTLED = "throttled"     # rejected by overload admission control — never
+#                             entered a scheduler queue (DESIGN.md §13)
 
 
 # -- SLO classes (DESIGN.md §12) ----------------------------------------------
@@ -92,8 +94,27 @@ class Request:
     ttft_slo: Optional[float] = None    # s; None = no TTFT target
     tbt_slo: Optional[float] = None     # s; None = no TBT target (the
     #                                     budget solver ignores this req)
+    # interaction membership (DESIGN.md §13) ------------------------------
+    # ``client`` stays the *session* name; ``user``/``app`` identify the
+    # fairness account the session bills to.  Both None = legacy flat
+    # stream (account == client, bit-identical pre-§13 behavior).
+    interaction_id: Optional[int] = None
+    turn_index: int = 0                 # position within the interaction
+    user: Optional[str] = None
+    app: Optional[str] = None
 
     # -- derived -------------------------------------------------------------
+    @property
+    def account(self) -> str:
+        """Fairness billing key (DESIGN.md §13): sessions of one
+        (user, app) pair share a single account, so a chatty app cannot
+        dodge counters by opening new sessions.  Falls back to the
+        session name when no interaction identity is attached."""
+        if self.user is None and self.app is None:
+            return self.client
+        return f"{self.user if self.user is not None else self.client}" \
+               f"@{self.app if self.app is not None else '-'}"
+
     @property
     def total_tokens(self) -> int:
         return self.prompt_len + self.output_len
@@ -150,3 +171,79 @@ class Request:
         t = self.tbt(now)
         return (self.tbt_slo is not None and t is not None
                 and t > self.tbt_slo)
+
+
+# -- interactions (DESIGN.md §13) ---------------------------------------------
+@dataclasses.dataclass
+class Interaction:
+    """A multi-turn conversation as a first-class scheduling object.
+
+    ``turns`` are ordered requests of one session; turn k only enters
+    the arrival stream once turn k−1 has *completed* plus the user's
+    think time (the closed-loop release rule — unlike the open-loop
+    ``multiturn_sharegpt_like`` trace, which pre-stamps every turn's
+    arrival at generation time).  ``stage`` counts completed turns,
+    ``released`` counts turns handed to the arrival stream; the frontends
+    drive both via ``mark_stage_complete``/``next_request``.
+
+    ``user``/``app`` are the fairness account the whole interaction
+    bills to (stamped onto every turn in ``__post_init__``); ``client``
+    on the turns stays the session name.
+    """
+    interaction_id: int
+    turns: List["Request"]
+    think_times: List[float] = None     # think_times[k] = user think time
+    #                                     BEFORE turn k (index 0 unused —
+    #                                     turn 0 keeps its stamped arrival)
+    user: Optional[str] = None
+    app: Optional[str] = None
+    stage: int = 0                      # turns completed
+    released: int = 0                   # turns handed to the arrival stream
+    throttled: bool = False             # admission rejected this interaction
+
+    def __post_init__(self):
+        if not self.turns:
+            raise ValueError("an Interaction needs at least one turn")
+        if self.think_times is None:
+            self.think_times = [0.0] * len(self.turns)
+        if len(self.think_times) != len(self.turns):
+            raise ValueError(
+                f"think_times length {len(self.think_times)} != "
+                f"{len(self.turns)} turns")
+        for k, t in enumerate(self.turns):
+            t.interaction_id = self.interaction_id
+            t.turn_index = k
+            t.user = self.user
+            t.app = self.app
+
+    @property
+    def done(self) -> bool:
+        return self.throttled or self.stage >= len(self.turns)
+
+    def next_request(self, now: float = None) -> Optional["Request"]:
+        """The next turn ready for the arrival stream, or None.  A turn
+        is ready once every prior turn completed (``released <= stage``).
+        With ``now`` given, the turn's arrival is re-stamped to
+        ``now + think_time`` — the closed-loop rule; turn 0 keeps the
+        arrival its generator stamped (the interaction's birth)."""
+        if self.throttled or self.released >= len(self.turns):
+            return None
+        if self.released > self.stage:
+            return None                  # previous turn still in flight
+        req = self.turns[self.released]
+        if now is not None and self.released > 0:
+            req.arrival = now + self.think_times[self.released]
+        self.released += 1
+        return req
+
+    def mark_stage_complete(self, now: float = None):
+        """Turn ``stage`` finished — the next turn becomes releasable."""
+        self.stage += 1
+
+    def throttle(self):
+        """Admission rejected this interaction: every unreleased turn is
+        marked THROTTLED (they never enter a scheduler queue) so metrics
+        can count the account's denied work as zero-service."""
+        self.throttled = True
+        for t in self.turns[self.released:]:
+            t.state = THROTTLED

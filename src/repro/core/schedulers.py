@@ -25,6 +25,13 @@ Protocol (driven by the simulator and the serving engine):
 
 Service accounting (for fairness metrics) is uniform across policies:
 weighted tokens, input counted at admit, output counted as generated.
+
+Billing key (DESIGN.md §13): every queue and counter is keyed by
+``Request.account`` — the (user, app) fairness account — not the session
+name.  Sessions of one account share a FIFO queue and accumulate into
+one counter, so a chatty app cannot dodge VTC/DLPM/Equinox fairness by
+opening new sessions.  Requests without interaction identity have
+``account == client``, keeping every pre-§13 trace bit-identical.
 """
 from __future__ import annotations
 
@@ -76,17 +83,18 @@ class SchedulerBase:
 
     # -- queue plumbing ------------------------------------------------------
     def on_arrival(self, req: Request, now: float):
-        if req.client not in self.arrived_clients:
-            self.arrived_clients.add(req.client)
-            self._on_new_client(req.client)
-        elif not self.client_active(req.client):
-            # the client was idle (nothing queued on any replica, nothing
+        acct = req.account
+        if acct not in self.arrived_clients:
+            self.arrived_clients.add(acct)
+            self._on_new_client(acct)
+        elif not self.client_active(acct):
+            # the account was idle (nothing queued on any replica, nothing
             # in a batch) and is returning — re-apply the no-gaming lift
             # so idle time never banks credit (VTC [Sheng et al.,
-            # OSDI'24]); a client actively backlogged on a peer replica
+            # OSDI'24]); an account actively backlogged on a peer replica
             # must NOT be lifted away from its earned priority
-            self._on_client_return(req.client)
-        self.queues[req.client].append(req)
+            self._on_client_return(acct)
+        self.queues[acct].append(req)
 
     def _on_new_client(self, client: str):
         pass
@@ -139,27 +147,27 @@ class SchedulerBase:
     # -- service accounting ----------------------------------------------------
     def on_admit(self, req: Request, now: float):
         inc = req.weight * self.billable_input(req)
-        self.service[req.client] += inc
+        self.service[req.account] += inc
         req._service_charged = inc
-        self.inflight[req.client] += 1
+        self.inflight[req.account] += 1
 
     def on_token(self, req: Request, now: float, n: int = 1):
         inc = req.weight * C.OUT_TOKEN_WEIGHT * n
-        self.service[req.client] += inc
+        self.service[req.account] += inc
         req._service_charged = getattr(req, "_service_charged", 0.0) + inc
 
     def on_complete(self, req: Request, now: float, *, latency: float,
                     tps: float, util: float):
-        self.inflight[req.client] = max(self.inflight[req.client] - 1, 0)
+        self.inflight[req.account] = max(self.inflight[req.account] - 1, 0)
 
     def on_preempt(self, req: Request, now: float):
         """Refund semantics (DESIGN.md §10): preemption-by-recompute
         discards the victim's work, so every service charge made since
         its admission is returned — re-admission re-charges from scratch
         and preempted service is never double-billed."""
-        self.service[req.client] -= getattr(req, "_service_charged", 0.0)
+        self.service[req.account] -= getattr(req, "_service_charged", 0.0)
         req._service_charged = 0.0
-        self.inflight[req.client] = max(self.inflight[req.client] - 1, 0)
+        self.inflight[req.account] = max(self.inflight[req.account] - 1, 0)
 
     def on_requeue(self, req: Request, now: float):
         """A popped request failed admission (``canSchedule``/adaptive
@@ -231,6 +239,9 @@ class RPM(SchedulerBase):
     name = "rpm"
 
     def __init__(self, quota_per_min: float = 60.0):
+        if quota_per_min <= 0:
+            raise ValueError(f"RPM quota_per_min must be > 0, got "
+                             f"{quota_per_min}")
         super().__init__()
         self.quota = quota_per_min
         self.windows: Dict[str, collections.deque] = collections.defaultdict(
@@ -263,8 +274,8 @@ class RPM(SchedulerBase):
         the window already), and popping someone else's valid entry
         would transiently over-admit the client."""
         try:
-            self.windows[req.client].remove(getattr(req, "_rpm_window_t",
-                                                    None))
+            self.windows[req.account].remove(getattr(req, "_rpm_window_t",
+                                                     None))
         except ValueError:
             pass                          # entry already rolled out
 
@@ -327,14 +338,14 @@ class VTC(SchedulerBase):
         if self.predictor is not None:
             self.predictor.predict(req)
             inc += req.weight * self.w * req.pred_output_len
-        self.counter[req.client] += inc
+        self.counter[req.account] += inc
         req._vtc_charged = inc
 
     def on_token(self, req, now, n=1):
         super().on_token(req, now, n)
         if self.predictor is None:
             inc = req.weight * self.w * n
-            self.counter[req.client] += inc
+            self.counter[req.account] += inc
             req._vtc_charged = getattr(req, "_vtc_charged", 0.0) + inc
 
     def on_complete(self, req, now, *, latency, tps, util):
@@ -342,32 +353,32 @@ class VTC(SchedulerBase):
         if self.predictor is not None:
             # reconcile predicted vs actual output tokens
             err = req.output_len - (req.pred_output_len or 0.0)
-            self.counter[req.client] += req.weight * self.w * err
+            self.counter[req.account] += req.weight * self.w * err
             self.predictor.observe(req, latency=latency, tps=tps, util=util)
 
     def on_preempt(self, req, now):
         super().on_preempt(req, now)
-        self.counter[req.client] -= getattr(req, "_vtc_charged", 0.0)
+        self.counter[req.account] -= getattr(req, "_vtc_charged", 0.0)
         req._vtc_charged = 0.0
 
     def prefill_order(self, reqs):
-        """Fill the chunk budget for the least-served client first
+        """Fill the chunk budget for the least-served account first
         (DESIGN.md §12): under a binding SLO budget the tail of the
         order may get nothing this iteration, and that starvation must
         land on whoever is furthest ahead on service.  Stable sort,
         rid tie-break — deterministic on both frontends."""
-        return sorted(reqs, key=lambda r: (self.counter.get(r.client, 0.0),
+        return sorted(reqs, key=lambda r: (self.counter.get(r.account, 0.0),
                                            r.rid))
 
     def select_victim(self, running, now):
-        """Largest-counter client's youngest request — the VTC framing of
-        FairBatching's rule: the client furthest ahead on service gives
-        work back first."""
+        """Largest-counter account's youngest request — the VTC framing
+        of FairBatching's rule: the account furthest ahead on service
+        gives work back first."""
         if not running or self.victim_policy != "fair":
             return super().select_victim(running, now)
-        worst = max({r.client for r in running},
+        worst = max({r.account for r in running},
                     key=lambda c: (self.counter.get(c, 0.0), c))
-        return self._youngest([r for r in running if r.client == worst])
+        return self._youngest([r for r in running if r.account == worst])
 
     def fairness_scores(self):
         return dict(self.counter)
@@ -438,9 +449,9 @@ class DLPM(VTC):
         prefix) preempt the youngest, as everywhere else."""
         if not running or self.victim_policy != "fair":
             return super(VTC, self).select_victim(running, now)
-        worst = max({r.client for r in running},
+        worst = max({r.account for r in running},
                     key=lambda c: (self.counter.get(c, 0.0), c))
-        mine = [r for r in running if r.client == worst]
+        mine = [r for r in running if r.account == worst]
         low = min(r.cached_prefix for r in mine)
         return self._youngest([r for r in mine if r.cached_prefix == low])
 
@@ -527,21 +538,21 @@ class Equinox(SchedulerBase):
         tilt = 1.0 + self.p.delta * lat       # UFC denominator (§3.1)
         rfc_inc = C.rfc_increment(req.pred_tps or 0.0, req.pred_util or 0.0,
                                   req.weight)
-        self.rfc[req.client] = self.rfc.get(req.client, 0.0) + rfc_inc
+        self.rfc[req.account] = self.rfc.get(req.account, 0.0) + rfc_inc
         req._rfc_charged = rfc_inc
         req._admit_wait = wait
         req._tilt = tilt
-        self.ufc.setdefault(req.client, 0.0)
+        self.ufc.setdefault(req.account, 0.0)
         if self.p.charging == "upfront":
             ufc_inc = (req.weight * (self.billable_input(req)
                                      + C.OUT_TOKEN_WEIGHT
                                      * req.pred_output_len) / tilt)
-            self.ufc[req.client] += ufc_inc
+            self.ufc[req.account] += ufc_inc
             req._ufc_charged = ufc_inc
         else:
             # incremental: charge the prompt now, outputs as produced
             inc = req.weight * self.billable_input(req) / tilt
-            self.ufc[req.client] += inc
+            self.ufc[req.account] += inc
             req._ufc_charged = inc
 
     def on_token(self, req, now, n=1):
@@ -549,7 +560,7 @@ class Equinox(SchedulerBase):
         if self.p.charging == "incremental":
             inc = (req.weight * C.OUT_TOKEN_WEIGHT * n
                    / getattr(req, "_tilt", 1.0))
-            self.ufc[req.client] += inc
+            self.ufc[req.account] += inc
             req._ufc_charged = getattr(req, "_ufc_charged", 0.0) + inc
 
     def on_preempt(self, req, now):
@@ -559,28 +570,29 @@ class Equinox(SchedulerBase):
         modulo the latency-tilt term (which legitimately reflects the
         extra wait the preemption caused)."""
         super().on_preempt(req, now)
-        self.ufc[req.client] -= getattr(req, "_ufc_charged", 0.0)
-        self.rfc[req.client] -= getattr(req, "_rfc_charged", 0.0)
+        self.ufc[req.account] -= getattr(req, "_ufc_charged", 0.0)
+        self.rfc[req.account] -= getattr(req, "_rfc_charged", 0.0)
         req._ufc_charged = 0.0
         req._rfc_charged = 0.0
 
     def prefill_order(self, reqs):
-        """Smallest-HF client's chunks first (DESIGN.md §12) — the same
+        """Smallest-HF account's chunks first (DESIGN.md §12) — the same
         holistic order ``pop_next`` admits by decides who consumes the
         SLO-solved budget when it cannot cover everyone."""
         hf = self._hf()
-        return sorted(reqs, key=lambda r: (hf.get(r.client, 0.0), r.rid))
+        return sorted(reqs, key=lambda r: (hf.get(r.account, 0.0), r.rid))
 
     def select_victim(self, running, now):
-        """Highest-HF client's youngest request (DESIGN.md §10): the most
-        holistically over-served client gives capacity back first, and
-        within that client the youngest request loses the least work."""
+        """Highest-HF account's youngest request (DESIGN.md §10): the
+        most holistically over-served account gives capacity back first,
+        and within that account the youngest request loses the least
+        work."""
         if not running or self.victim_policy != "fair":
             return super().select_victim(running, now)
         hf = self._hf()
-        worst = max({r.client for r in running},
+        worst = max({r.account for r in running},
                     key=lambda c: (hf.get(c, 0.0), c))
-        return self._youngest([r for r in running if r.client == worst])
+        return self._youngest([r for r in running if r.account == worst])
 
     def on_complete(self, req, now, *, latency, tps, util):
         """Algorithm 1 line 20: refresh HF_c with *actual* metrics — replace
@@ -594,11 +606,11 @@ class Equinox(SchedulerBase):
                                      req.weight, self.p.delta,
                                      t_in_cached=req.cached_prefix,
                                      omega_cached=self.omega_cached)
-            self.ufc[req.client] += actual - getattr(req, "_ufc_charged",
-                                                     actual)
+            self.ufc[req.account] += actual - getattr(req, "_ufc_charged",
+                                                      actual)
         actual_rfc = C.rfc_increment(tps, util, req.weight)
-        self.rfc[req.client] += actual_rfc - getattr(req, "_rfc_charged",
-                                                     actual_rfc)
+        self.rfc[req.account] += actual_rfc - getattr(req, "_rfc_charged",
+                                                      actual_rfc)
         self.predictor.observe(req, latency=latency, tps=tps, util=util)
 
     def fairness_scores(self):

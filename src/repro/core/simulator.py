@@ -25,11 +25,14 @@ The simulator also exposes the replica protocol (``submit`` / ``step`` /
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, List
 
 import numpy as np
 
-from repro.core.request import DECODING, FINISHED, PREFILLING, Request
+from repro.core import counters as C
+from repro.core.request import (DECODING, FINISHED, PREFILLING, THROTTLED,
+                                Request)
 from repro.core.schedulers import SchedulerBase
 from repro.serving.batch_core import BatchConfig, BatchCore
 from repro.serving.costmodel import CostModel
@@ -64,6 +67,9 @@ class SimResult:
     timeline: Timeline
     scheduler: SchedulerBase
     sim_time: float
+    # admission-control accounting (DESIGN.md §13)
+    wasted_preempt: float = 0.0     # recompute waste from preemptions
+    n_throttled: int = 0            # requests rejected by admission
 
     # -- metrics ---------------------------------------------------------------
     def by_client(self):
@@ -123,6 +129,24 @@ class SimResult:
             return 1.0
         return float(xs.sum() ** 2 / (len(xs) * np.sum(xs ** 2)))
 
+    # -- goodput / waste (DESIGN.md §13) -----------------------------------
+    def goodput_tokens_per_s(self) -> float:
+        """*Delivered* weighted tokens per second: only requests that
+        finished count — tokens computed for preempted-then-dropped or
+        horizon-unfinished work are capacity, not goodput."""
+        tot = sum(r.prompt_len + C.OUT_TOKEN_WEIGHT * r.generated
+                  for r in self.requests if r.state == FINISHED)
+        return tot / max(self.sim_time, 1e-9)
+
+    def wasted_tokens(self) -> float:
+        """Computed-but-undelivered tokens: recompute waste from
+        preemptions (accumulated by ``BatchCore.preempt``) plus whatever
+        unfinished requests computed by the horizon (their prefill and
+        partial decode occupied the GPU yet delivered nothing)."""
+        partial = sum(max(r.prefill_done - r.cached_prefix, 0) + r.generated
+                      for r in self.requests if r.state != FINISHED)
+        return self.wasted_preempt + partial
+
 
 class Simulator:
     """One simulated replica.  ``run`` drives a whole trace; the
@@ -130,7 +154,8 @@ class Simulator:
     uses to interleave several replicas on a global event loop."""
 
     def __init__(self, cost_model: CostModel, scheduler: SchedulerBase,
-                 sim_cfg: SimConfig = SimConfig(), observer=None):
+                 sim_cfg: SimConfig = SimConfig(), observer=None,
+                 admission=None):
         self.cm = cost_model
         self.sched = scheduler
         self.observer = observer
@@ -151,7 +176,8 @@ class Simulator:
                                               kv_page_size=sim_cfg.page_size)
         self.cfg = sim_cfg
         self.core = BatchCore(scheduler, cost_model, sim_cfg,
-                              observer=observer, prefix_cache=cache)
+                              observer=observer, prefix_cache=cache,
+                              admission=admission)
         self.kv_budget = self.core.kv_budget
         self._reset()
 
@@ -163,6 +189,9 @@ class Simulator:
         self.core.kv_used = 0
         self.core.reserved.clear()
         self.core.n_preemptions = 0
+        self.core.wasted_tokens = 0.0
+        self.core.throttled = []
+        self.core.interactions = {}
 
     @property
     def n_preemptions(self) -> int:
@@ -178,6 +207,10 @@ class Simulator:
         self.t = max(self.t, t)
 
     def submit(self, req: Request):
+        # overload-aware admission gate (DESIGN.md §13): a throttled
+        # request never reaches a scheduler queue
+        if not self.core.accept(req, self.t):
+            return
         self.sched.on_arrival(req, self.t)
 
     def has_work(self) -> bool:
@@ -271,25 +304,61 @@ class Simulator:
         self.tl.budget.append(self.core.last_prefill_budget)
         return True
 
-    def run(self, requests: List[Request], max_time: float = None) -> SimResult:
+    def run(self, requests: List[Request] = None, max_time: float = None,
+            interactions=None) -> SimResult:
+        """Drive a trace to completion (or ``max_time``).
+
+        ``requests`` — flat open-loop stream (pre-stamped arrivals, the
+        historical path, bit-identical to the pre-§13 loop).
+        ``interactions`` — first-class ``Interaction`` objects, released
+        *closed-loop*: only each interaction's first turn enters the
+        arrival stream up front; turn k+1 arrives when ``BatchCore.
+        complete`` fires the turn-release hook at turn k's finish time
+        plus think time.  Both kinds can be mixed in one run.
+        """
         max_time = max_time or self.cfg.max_time
         self._reset()
-        pending = sorted(requests, key=lambda r: r.arrival)
-        pi = 0
-        n_total = len(pending)
+        heap: List[tuple] = []        # (arrival, seq, req) — seq keeps the
+        seq = 0                       # submission order of arrival ties
+        #                               identical to the sorted-list loop
+        all_reqs: List[Request] = []
 
-        while self.n_finished < n_total and self.t < max_time:
-            # arrivals up to now
-            while pi < n_total and pending[pi].arrival <= self.t:
-                self.submit(pending[pi])
-                pi += 1
-            # idle jump
+        def push(req):
+            nonlocal seq
+            heapq.heappush(heap, (req.arrival, seq, req))
+            all_reqs.append(req)
+            seq += 1
+
+        for r in sorted(requests or [], key=lambda r: r.arrival):
+            push(r)
+        for inter in interactions or []:
+            self.core.register_interaction(inter)
+            first = inter.next_request()      # keeps its stamped arrival
+            if first is not None:
+                push(first)
+        self.core.on_turn_release = lambda nxt, now: push(nxt)
+
+        while self.t < max_time:
+            while heap and heap[0][0] <= self.t:
+                self.submit(heapq.heappop(heap)[2])
             if not self.running and not self.sched.has_waiting():
-                if pi >= n_total:
-                    break
-                self.t = pending[pi].arrival
+                if not heap:
+                    break             # drained: nothing running, queued,
+                #                       due, or releasable (closed loop:
+                #                       releases only happen inside step)
+                self.t = heap[0][0]   # idle jump to the next arrival
                 continue
             self.step()
 
-        return SimResult(requests=pending, timeline=self.tl,
-                         scheduler=self.sched, sim_time=self.t)
+        # result set: everything that entered the arrival stream, plus
+        # the turns a throttled/unfinished interaction never released —
+        # metrics must see the denied work (delivered-Jain zero-service
+        # accounts, throttle counts), not just the admitted subset
+        for inter in interactions or []:
+            all_reqs.extend(inter.turns[inter.released:])
+        all_reqs.sort(key=lambda r: (r.arrival, r.rid))
+        return SimResult(requests=all_reqs, timeline=self.tl,
+                         scheduler=self.sched, sim_time=self.t,
+                         wasted_preempt=self.core.wasted_tokens,
+                         n_throttled=sum(r.state == THROTTLED
+                                         for r in all_reqs))

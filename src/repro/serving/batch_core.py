@@ -40,8 +40,9 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core.request import (DECODING, FINISHED, PREEMPTED, PREFILLING,
-                                Request)
+                                THROTTLED, Request)
 from repro.core.schedulers import SchedulerBase
+from repro.serving.admission import as_controller
 from repro.serving.costmodel import CostModel
 
 
@@ -107,7 +108,8 @@ class BatchCore:
     """
 
     def __init__(self, scheduler: SchedulerBase, cost_model: CostModel,
-                 cfg: BatchConfig = None, observer=None, prefix_cache=None):
+                 cfg: BatchConfig = None, observer=None, prefix_cache=None,
+                 admission=None):
         self.sched = scheduler
         self.cm = cost_model
         self.cfg = cfg or BatchConfig()
@@ -123,6 +125,12 @@ class BatchCore:
         self.blocked_client = None      # set by try_admit on canSchedule fail
         self.last_prefill_budget = None  # solved budget of the last
         #                                  plan_prefill (DESIGN.md §12)
+        # interactions + overload-aware admission (DESIGN.md §13) -----------
+        self.admission = as_controller(admission)
+        self.interactions: Dict[int, object] = {}   # id -> Interaction
+        self.on_turn_release = None     # driver hook: next turn -> arrivals
+        self.throttled: List[Request] = []
+        self.wasted_tokens = 0.0        # recompute waste from preemptions
 
     # -- locality probe threading (DESIGN.md §11) ----------------------------
     @property
@@ -191,8 +199,54 @@ class BatchCore:
         return self.kv_used / max(self.kv_budget, 1)
 
     def _requeue(self, req: Request, now: float):
-        self.sched.queues[req.client].appendleft(req)
+        self.sched.queues[req.account].appendleft(req)
         self.sched.on_requeue(req, now)
+
+    # -- overload-aware admission (DESIGN.md §13) ----------------------------
+    def register_interaction(self, inter):
+        """Make an interaction's turn chain visible to ``complete`` (the
+        closed-loop release rule) and to ``accept``'s throttle-before-
+        inflight test."""
+        self.interactions[inter.interaction_id] = inter
+
+    def queued_prompt_tokens(self) -> int:
+        """Prompt-token backlog sitting in the scheduler queues — the
+        second overload signal (a saturated KV can drain; a deep prefill
+        backlog means arrivals outpace completions)."""
+        return sum(r.prompt_len for q in self.sched.queues.values()
+                   for r in q)
+
+    def overloaded(self) -> bool:
+        """Is this replica under enough pressure that the admission
+        windows should bite?  Off-peak the throttle must be invisible —
+        that's what distinguishes it from a static RPM quota."""
+        if self.admission is None:
+            return False
+        cfg = self.admission.cfg
+        return (self.kv_load() >= cfg.kv_thresh
+                or self.queued_prompt_tokens()
+                >= cfg.queue_thresh * self.kv_budget)
+
+    def accept(self, req: Request, now: float) -> bool:
+        """Admission-control gate in front of ``scheduler.on_arrival`` —
+        both frontends route every arrival through here.  Returns False
+        when the request (necessarily a turn-0: in-flight turns always
+        pass) was throttled; the whole interaction is then rejected and
+        its unreleased turns are marked THROTTLED."""
+        if self.admission is None:
+            return True
+        if self.admission.allow(req, now, self.overloaded()):
+            return True
+        req.state = THROTTLED
+        self.throttled.append(req)
+        inter = (self.interactions.get(req.interaction_id)
+                 if req.interaction_id is not None else None)
+        if inter is not None:
+            inter.throttle()
+        if self.observer is not None and hasattr(self.observer,
+                                                 "on_throttle"):
+            self.observer.on_throttle(req, now)
+        return False
 
     def try_admit(self, now: float, batch_len: int,
                   exclude=None) -> Optional[Request]:
@@ -217,9 +271,9 @@ class BatchCore:
                              if self.prefix_cache is not None else 0)
         need = self.reserve_amount(req)
         if self.kv_used + need > self.kv_headroom() and batch_len > 0:
-            # canSchedule failed -> requeue at head, skip this client
+            # canSchedule failed -> requeue at head, skip this account
             self._requeue(req, now)
-            self.blocked_client = req.client
+            self.blocked_client = req.account
             return None
         if self.cfg.adaptive_batching and batch_len > 0:
             proj = self.cm.prefill_time(
@@ -297,6 +351,11 @@ class BatchCore:
         the *head* of its client queue."""
         self.kv_used -= self.reserved.pop(req.rid, 0)
         self.release_kv(req)
+        # recompute waste (DESIGN.md §13): every token this admission
+        # computed — the uncached prefill plus all generated output — is
+        # discarded and will be re-computed after re-admission
+        self.wasted_tokens += max(req.prefill_done - req.cached_prefix, 0) \
+            + req.generated
         req.generated_peak = max(req.generated_peak, req.generated)
         req.state = PREEMPTED
         req.n_preempted += 1
@@ -306,7 +365,7 @@ class BatchCore:
         req.cached_prefix = 0
         self.n_preemptions += 1
         self.sched.on_preempt(req, now)
-        self.sched.queues[req.client].appendleft(req)
+        self.sched.queues[req.account].appendleft(req)
         if self.observer is not None and hasattr(self.observer,
                                                  "on_preempt"):
             self.observer.on_preempt(req, now)
@@ -548,4 +607,16 @@ class BatchCore:
         if self.observer is not None:
             self.observer.on_complete(req, now, latency=exec_lat, tps=tps,
                                       util=util)
+        # closed-loop turn release (DESIGN.md §13): a finished turn
+        # unlocks the interaction's next one — its arrival becomes
+        # now + think time, and the driver's hook feeds it back into the
+        # arrival stream (the whole point of first-class interactions:
+        # turn k+1 *cannot* be scheduled before turn k finished)
+        if req.interaction_id is not None:
+            inter = self.interactions.get(req.interaction_id)
+            if inter is not None:
+                inter.mark_stage_complete(now)
+                nxt = inter.next_request(now)
+                if nxt is not None and self.on_turn_release is not None:
+                    self.on_turn_release(nxt, now)
         return exec_lat, tps, util

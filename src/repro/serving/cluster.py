@@ -46,14 +46,17 @@ another replica's future.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.metrics import jain
-from repro.core.request import FINISHED, Request
+from repro.core import counters as C
+from repro.core.metrics import delivered_jain, jain
+from repro.core.request import FINISHED, THROTTLED, Request
 from repro.core.schedulers import SchedulerBase, make_scheduler
 from repro.core.simulator import SimConfig, Simulator
+from repro.serving.admission import as_controller, share_admission_state
 from repro.serving.costmodel import CostModel
 
 # Per-client fairness containers that must be cluster-global.  Queues are
@@ -238,6 +241,26 @@ class ClusterResult:
         return jain(list(self._merged(
             lambda s: s.fairness_scores()).values()))
 
+    # -- admission-control accounting (DESIGN.md §13) ----------------------
+    def goodput_tokens_per_s(self) -> float:
+        """Delivered weighted tokens per second across the cluster."""
+        tot = sum(r.prompt_len + C.OUT_TOKEN_WEIGHT * r.generated
+                  for r in self.requests if r.state == FINISHED)
+        return tot / max(self.sim_time, 1e-9)
+
+    def wasted_tokens(self) -> float:
+        """Recompute waste from preemptions on every replica plus the
+        computed-but-undelivered tokens of horizon-unfinished requests."""
+        pre = sum(getattr(getattr(rep, "core", None), "wasted_tokens", 0.0)
+                  for rep in self.replicas)
+        partial = sum(max(r.prefill_done - r.cached_prefix, 0) + r.generated
+                      for r in self.requests if r.state != FINISHED)
+        return pre + partial
+
+    @property
+    def n_throttled(self) -> int:
+        return sum(r.state == THROTTLED for r in self.requests)
+
     def replica_finished(self) -> List[int]:
         return [rep.n_finished for rep in self.replicas]
 
@@ -280,6 +303,10 @@ class ClusterResult:
             "per_replica": self.replica_finished(),
             "preemptions_per_replica": self.replica_preemptions(),
             "preemption_rate": self.preemption_rate(),
+            "goodput_tok_s": self.goodput_tokens_per_s(),
+            "wasted_tokens": self.wasted_tokens(),
+            "n_throttled": self.n_throttled,
+            "jain_delivered": delivered_jain(self.requests),
         }
 
 
@@ -303,37 +330,82 @@ class Cluster:
         self.policy = policy
         self._rr = 0
         self.routed_to: Dict[int, int] = {}
+        # interaction -> replica pin (DESIGN.md §13): later turns must
+        # land where their history's radix pages live, whatever the
+        # load-balancing policy would prefer
+        self.interaction_replica: Dict[int, int] = {}
         self.counters_shared = share_counters
         if share_counters:
             share_fairness_state([rep.sched for rep in replicas])
+            # the admission windows are cluster-global too: spraying
+            # interaction starts across replicas must hit ONE window
+            share_admission_state(
+                [rep.core.admission for rep in replicas
+                 if getattr(rep, "core", None) is not None
+                 and rep.core.admission is not None])
 
     def dispatch(self, req: Request) -> int:
-        """Route one request to a replica (records the decision)."""
-        idx = self.policy(self, req)
+        """Route one request to a replica (records the decision).  Turns
+        of a known interaction stick to their interaction's replica —
+        KV/prefix reuse is replica-local, so affinity beats whatever the
+        load balancer would pick for turn k>0."""
+        iid = req.interaction_id
+        if iid is not None and iid in self.interaction_replica:
+            idx = self.interaction_replica[iid]
+        else:
+            idx = self.policy(self, req)
+            if iid is not None:
+                self.interaction_replica[iid] = idx
         self.routed_to[req.rid] = idx
         self.replicas[idx].submit(req)
         return idx
 
-    def run(self, requests: List[Request],
-            max_time: float = 1e9) -> ClusterResult:
-        pending = sorted(requests, key=lambda r: r.arrival)
-        pi, n_total = 0, len(pending)
+    def run(self, requests: List[Request] = None, max_time: float = 1e9,
+            interactions=None) -> ClusterResult:
+        heap: List[tuple] = []        # (arrival, seq, req)
+        seq = 0
+        all_reqs: List[Request] = []
+
+        def push(req):
+            nonlocal seq
+            heapq.heappush(heap, (req.arrival, seq, req))
+            all_reqs.append(req)
+            seq += 1
+
+        for r in sorted(requests or [], key=lambda r: r.arrival):
+            push(r)
+        # one cluster-wide interaction registry, aliased into every
+        # replica core: the replica that completes turn k releases turn
+        # k+1 into the *cluster's* arrival heap (dispatch then pins it
+        # back to the same replica via interaction_replica)
+        registry: Dict[int, object] = {}
+        for inter in interactions or []:
+            registry[inter.interaction_id] = inter
+            first = inter.next_request()  # keeps its stamped arrival
+            if first is not None:
+                push(first)
+        for rep in self.replicas:
+            core = getattr(rep, "core", None)
+            if core is not None:
+                core.interactions = registry
+                core.on_turn_release = lambda nxt, now: push(nxt)
 
         # completion is judged on THIS run's requests (leftovers from an
-        # earlier max_time-cut run may still finish; they don't count)
-        while any(r.state != FINISHED for r in pending):
+        # earlier max_time-cut run may still finish; they don't count);
+        # throttled requests never finish — they are closed, not open
+        while heap or any(r.state not in (FINISHED, THROTTLED)
+                          for r in all_reqs):
             busy = [rep for rep in self.replicas if rep.has_work()]
             if not busy:
                 # whole cluster idle: jump to the next arrival
-                if pi >= n_total:
+                if not heap:
                     break
-                t_now = pending[pi].arrival
+                t_now = heap[0][0]
                 if t_now >= max_time:
                     break
                 for rep in self.replicas:
                     rep.advance_to(t_now)
-                self.dispatch(pending[pi])
-                pi += 1
+                self.dispatch(heapq.heappop(heap)[2])
                 continue
             # event frontier = slowest busy replica; idle replicas keep
             # pace (they would accept work instantly at "now")
@@ -344,9 +416,8 @@ class Cluster:
                 if not rep.has_work():
                     rep.advance_to(t_now)
             # route every arrival the frontier has reached
-            while pi < n_total and pending[pi].arrival <= t_now:
-                self.dispatch(pending[pi])
-                pi += 1
+            while heap and heap[0][0] <= t_now:
+                self.dispatch(heapq.heappop(heap)[2])
             rep = min((r for r in self.replicas if r.has_work()),
                       key=lambda r: r.clock)
             before = rep.clock
@@ -356,8 +427,13 @@ class Cluster:
                 # model a host polling tick so the event loop advances
                 rep.advance_to(before + rep.cm.hw.batch_overhead)
 
+        # surface the denied work: turns a throttled (or horizon-cut)
+        # interaction never released still belong to this run's metrics
+        for inter in interactions or []:
+            all_reqs.extend(inter.turns[inter.released:])
+        all_reqs.sort(key=lambda r: (r.arrival, r.rid))
         sim_time = max(rep.clock for rep in self.replicas)
-        return ClusterResult(requests=pending, replicas=self.replicas,
+        return ClusterResult(requests=all_reqs, replicas=self.replicas,
                              scheduler=self.replicas[0].sched,
                              sim_time=sim_time, routed_to=dict(self.routed_to),
                              counters_shared=self.counters_shared)
@@ -369,19 +445,23 @@ def make_sim_cluster(n_replicas: int, cost_model: CostModel = None, *,
                      sim_cfg: SimConfig = None,
                      policy: Union[str, Callable] = "least_kv",
                      share_counters: bool = True, observer=None,
-                     **sched_kw) -> Cluster:
+                     admission=None, **sched_kw) -> Cluster:
     """Cluster of simulated replicas.  Pass ``cost_models`` (one per
     replica) for a heterogeneous fleet — e.g. mixing ``A100_80G`` and
     TPU-v5e ``Hardware`` presets; the predictor (shared by all replicas,
     so recalibration is global too) and fairness counters span the
-    cluster."""
+    cluster.  ``admission`` (an ``AdmissionConfig`` or a ready
+    controller, DESIGN.md §13) is normalized to ONE controller handed to
+    every replica, so the sliding windows are cluster-global regardless
+    of ``share_counters``."""
     cms = list(cost_models) if cost_models is not None \
         else [cost_model] * n_replicas
     if len(cms) != n_replicas or any(c is None for c in cms):
         raise ValueError("provide cost_model or n_replicas cost_models")
+    ctrl = as_controller(admission)
     reps = []
     for cm in cms:
         sched = make_scheduler(scheduler, predictor=predictor, **sched_kw)
         reps.append(Simulator(cm, sched, sim_cfg or SimConfig(),
-                              observer=observer))
+                              observer=observer, admission=ctrl))
     return Cluster(reps, policy=policy, share_counters=share_counters)

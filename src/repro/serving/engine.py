@@ -39,6 +39,7 @@ never at admission.  Like the simulator it exposes the replica protocol
 """
 from __future__ import annotations
 
+import heapq
 import time
 from typing import Dict, List, Optional
 
@@ -74,7 +75,7 @@ class ServingEngine:
                  slo_budget: str = "static",
                  prefix_cache: bool = False,
                  keep_first_logits: bool = False,
-                 observer=None):
+                 observer=None, admission=None):
         self.cfg = cfg
         self.sched = scheduler
         self.max_slots = max_slots
@@ -112,7 +113,7 @@ class ServingEngine:
                         # physically exhausts
                         kv_page_size=page_size if backend == "paged"
                         else 1),
-            observer=observer)
+            observer=observer, admission=admission)
         self.kv_budget = self.core.kv_budget
         self.sample_temp = sample_temp
         self.rng = jax.random.key(seed)
@@ -191,6 +192,11 @@ class ServingEngine:
         return -1
 
     def submit(self, req: Request):
+        # overload-aware admission gate (DESIGN.md §13) — same decision
+        # point as Simulator.submit, so sim and engine throttle the
+        # identical request set
+        if not self.core.accept(req, self.now()):
+            return
         if req.prompt_tokens is None:
             req.prompt_tokens = np.random.default_rng(req.rid).integers(
                 0, self.cfg.vocab_size, req.prompt_len).astype(np.int32)
@@ -492,20 +498,41 @@ class ServingEngine:
         self.iterations += 1
         return n_running
 
-    def run(self, requests: List[Request], max_iters: int = 1_000_000):
+    def run(self, requests: List[Request] = None,
+            max_iters: int = 1_000_000, interactions=None):
         """Submit everything (arrivals honored on the modeled clock) and
-        run to completion."""
-        pending = sorted(requests, key=lambda r: r.arrival)
-        pi = 0
+        run to completion.  ``interactions`` are released closed-loop:
+        turn k+1 enters the arrival heap when ``BatchCore.complete``
+        fires the turn-release hook at turn k's modeled finish time plus
+        think time — the same rule (and the same ``BatchCore`` code
+        path) as ``Simulator.run``, so the frontends stay in lockstep
+        (DESIGN.md §13)."""
+        heap: List[tuple] = []        # (arrival, seq, req); seq preserves
+        seq = 0                       # submission order on arrival ties
+
+        def push(req):
+            nonlocal seq
+            heapq.heappush(heap, (req.arrival, seq, req))
+            seq += 1
+
+        for r in sorted(requests or [], key=lambda r: r.arrival):
+            push(r)
+        for inter in interactions or []:
+            self.core.register_interaction(inter)
+            first = inter.next_request()  # keeps its stamped arrival
+            if first is not None:
+                push(first)
+        self.core.on_turn_release = lambda nxt, now: push(nxt)
+
         for _ in range(max_iters):
-            while pi < len(pending) and pending[pi].arrival <= self.now():
-                self.submit(pending[pi])
-                pi += 1
+            while heap and heap[0][0] <= self.now():
+                self.submit(heapq.heappop(heap)[2])
             n = self.step()
             if n == 0:
-                if pi >= len(pending):
-                    break
-                self.t_model = max(self.t_model, pending[pi].arrival)
+                if not heap:
+                    break             # drained: closed-loop releases only
+                #                       happen inside step's completions
+                self.t_model = max(self.t_model, heap[0][0])
         return self.finished
 
 

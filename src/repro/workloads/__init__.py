@@ -1,6 +1,7 @@
 from repro.workloads.synthetic import (SCENARIOS, balanced, diurnal, dynamic,
                                        overload, stochastic, tag_slo_classes)
 from repro.workloads.traces import (corpus, lmsys_like,
+                                    multiturn_interactions,
                                     multiturn_sharegpt_like, sharegpt_like,
                                     true_output_len)
 from repro.workloads.vocab import (TRACE_VOCAB, prompt_token_ids, stable_hash,
@@ -8,5 +9,6 @@ from repro.workloads.vocab import (TRACE_VOCAB, prompt_token_ids, stable_hash,
 
 __all__ = ["SCENARIOS", "balanced", "diurnal", "dynamic", "overload",
            "stochastic", "tag_slo_classes", "corpus", "lmsys_like",
-           "multiturn_sharegpt_like", "sharegpt_like", "true_output_len",
+           "multiturn_interactions", "multiturn_sharegpt_like",
+           "sharegpt_like", "true_output_len",
            "TRACE_VOCAB", "prompt_token_ids", "stable_hash", "token_id"]

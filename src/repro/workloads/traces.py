@@ -140,6 +140,86 @@ def multiturn_sharegpt_like(n_clients=8, n_conversations=3,
     return sorted(reqs, key=lambda r: r.arrival)
 
 
+def multiturn_interactions(n_users=4, n_apps=2, sessions_per_user=3,
+                           turns=(2, 6), system_pool=4, system_len=64,
+                           turn_len=(8, 160), think_time=2.0,
+                           session_gap=6.0, max_prompt=3500, seed=0):
+    """Closed-loop multi-turn trace: first-class ``Interaction`` objects
+    (DESIGN.md §13) instead of a pre-stamped request stream.
+
+    Each (user, app) pair opens ``sessions_per_user`` sessions; each
+    session is one interaction whose turns extend the conversation
+    history exactly like ``multiturn_sharegpt_like`` (shared system-
+    prompt pool, real token ids, LMSYS-style intent/output model).  The
+    crucial difference is arrival semantics: only turn 0 carries a
+    generator-stamped arrival (session starts are spaced by exponential
+    ``session_gap`` gaps per user); every later turn's arrival is
+    *decided at serving time* — ``Interaction.next_request`` stamps it
+    as the previous turn's completion plus an exponential think time
+    (mean ``think_time``, pre-drawn here so the trace stays
+    deterministic).  Apps are assigned round-robin over users, so
+    several users share an app and the per-app admission window has
+    real aggregation to do.
+
+    ``sessions_per_user`` may be a sequence, cycled over users — e.g.
+    ``(2, 8)`` makes every other user "chatty" (4× the sessions), the
+    demand skew the per-user admission windows are meant to clip.
+
+    Returns a list of ``Interaction``; feed via
+    ``Simulator.run(interactions=...)`` (or the engine / cluster
+    equivalents).
+    """
+    from repro.core.request import Interaction
+    rng = np.random.default_rng(seed)
+    sys_prompts = [prompt_token_ids(("system", f"sys{i}"), system_len,
+                                    seed=10_000 + i)
+                   for i in range(system_pool)]
+    if np.isscalar(sessions_per_user):
+        n_sessions = [int(sessions_per_user)] * n_users
+    else:
+        n_sessions = [int(sessions_per_user[ui % len(sessions_per_user)])
+                      for ui in range(n_users)]
+    inters, rid, iid = [], 0, 0
+    for ui in range(n_users):
+        user, app = f"user{ui}", f"app{ui % n_apps}"
+        t = float(rng.exponential(session_gap))
+        for si in range(n_sessions[ui]):
+            history = [sys_prompts[int(rng.integers(system_pool))]]
+            hist_len = len(history[0])
+            n_turns = int(rng.integers(turns[0], turns[1]))
+            sess_turns, thinks = [], []
+            for turn_i in range(n_turns):
+                kw, plen, intent = sample_prompt(rng)
+                user_len = int(np.clip(plen, turn_len[0], turn_len[1]))
+                user_toks = prompt_token_ids(kw, user_len,
+                                             seed=int(rng.integers(1 << 31)))
+                if hist_len + user_len > max_prompt:
+                    break
+                prompt = np.concatenate(history + [user_toks])
+                out_len = true_output_len(intent, len(prompt), rng)
+                # arrival: the real stamp for turn 0; a provisional
+                # open-loop one for later turns (overwritten at release
+                # — kept so an interaction trace can also be run flat)
+                sess_turns.append(Request(
+                    rid=rid, client=f"u{ui}s{si}", arrival=float(t),
+                    prompt_len=len(prompt), output_len=out_len,
+                    keywords=kw, prompt_tokens=prompt))
+                rid += 1
+                thinks.append(0.0 if turn_i == 0
+                              else float(rng.exponential(think_time)))
+                reply = filler_tokens(out_len,
+                                      seed=int(rng.integers(1 << 31)))
+                history += [user_toks, reply]
+                hist_len += user_len + out_len
+            if sess_turns:
+                inters.append(Interaction(
+                    interaction_id=iid, turns=sess_turns,
+                    think_times=thinks, user=user, app=app))
+                iid += 1
+            t += float(rng.exponential(session_gap))
+    return inters
+
+
 def sharegpt_like(n_clients=8, n_per_client=160, rate_per_client=3.5,
                   seed=0):
     """§7.3.2 setup: fixed per-client Poisson rate, fixed request count.

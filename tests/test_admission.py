@@ -1,0 +1,293 @@
+"""Overload-aware admission control (DESIGN.md §13).
+
+- `AdmissionConfig` input validation (ValueError, never assert).
+- Sliding-window mechanics: roll-off, overload gating (windows observe
+  always, bite only under overload), throttle-before-inflight.
+- `BatchCore` overload signals: KV pressure and queued-prompt backlog.
+- Metrics hardening: empty / fully-throttled populations produce
+  numbers, not NaNs or ZeroDivisionErrors.
+- Cluster threading: one shared window across replicas (spraying
+  session starts cannot dodge it) and interaction → replica affinity.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Request, SimConfig, Simulator, delivered_jain,
+                        make_scheduler)
+from repro.core.metrics import jain, service_difference_stats, summarize
+from repro.core.request import THROTTLED, Interaction
+from repro.serving.admission import (AdmissionConfig, AdmissionController,
+                                     as_controller, share_admission_state)
+from repro.serving.cluster import make_sim_cluster
+from repro.serving.costmodel import A100_80G, CostModel
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def _turn(rid, client, arrival=0.0, p=40, o=16, user=None, app=None):
+    return Request(rid=rid, client=client, arrival=arrival, prompt_len=p,
+                   output_len=o, keywords=("chat",), user=user, app=app)
+
+
+# -- config validation --------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(window_s=0.0), dict(window_s=-5.0), dict(window_s=None),
+    dict(user_rate=0.0), dict(user_rate=-1.0),
+    dict(app_rate=0.0), dict(app_rate=-1.0),
+    dict(kv_thresh=0.0), dict(kv_thresh=1.5), dict(kv_thresh=-0.1),
+    dict(queue_thresh=0.0), dict(queue_thresh=2.0),
+])
+def test_admission_config_rejects_bad_knobs(bad):
+    with pytest.raises(ValueError):
+        AdmissionConfig(**bad)
+
+
+def test_admission_config_boundary_values_ok():
+    AdmissionConfig(kv_thresh=1.0, queue_thresh=1.0)   # (0, 1] inclusive top
+
+
+def test_as_controller_normalizes():
+    assert as_controller(None) is None
+    ctrl = as_controller(AdmissionConfig())
+    assert isinstance(ctrl, AdmissionController)
+    assert as_controller(ctrl) is ctrl
+    with pytest.raises(ValueError):
+        as_controller("throttle-hard")
+
+
+def test_rpm_quota_validates():
+    with pytest.raises(ValueError):
+        make_scheduler("rpm", quota_per_min=0)
+    with pytest.raises(ValueError):
+        make_scheduler("rpm", quota_per_min=-3)
+
+
+# -- window mechanics ---------------------------------------------------------
+
+def test_windows_observe_but_never_bite_off_peak():
+    ctrl = AdmissionController(AdmissionConfig(window_s=60, user_rate=2,
+                                               app_rate=2))
+    for i in range(10):                         # 5x over both rates
+        assert ctrl.allow(_turn(i, f"s{i}", user="u", app="a"),
+                          now=float(i), overloaded=False)
+    assert ctrl.stats["n_throttled"] == 0
+    assert ctrl.stats["n_allowed"] == 10
+
+
+def test_windows_bite_under_overload_and_roll_off():
+    ctrl = AdmissionController(AdmissionConfig(window_s=10, user_rate=2,
+                                               app_rate=100))
+    assert ctrl.allow(_turn(0, "s0", user="u", app="a"), 0.0, True)
+    assert ctrl.allow(_turn(1, "s1", user="u", app="a"), 1.0, True)
+    # window full: third start from the same user is throttled
+    assert not ctrl.allow(_turn(2, "s2", user="u", app="a"), 2.0, True)
+    assert ctrl.stats["n_throttled"] == 1
+    # a different user is untouched
+    assert ctrl.allow(_turn(3, "s3", user="v", app="a"), 2.0, True)
+    # after the window slides past the old starts, u is admitted again
+    assert ctrl.allow(_turn(4, "s4", user="u", app="a"), 11.0, True)
+
+
+def test_app_window_aggregates_users():
+    ctrl = AdmissionController(AdmissionConfig(window_s=60, user_rate=100,
+                                               app_rate=2))
+    assert ctrl.allow(_turn(0, "s0", user="u0", app="a"), 0.0, True)
+    assert ctrl.allow(_turn(1, "s1", user="u1", app="a"), 0.0, True)
+    # third user of the same app: the per-tenant cap bites
+    assert not ctrl.allow(_turn(2, "s2", user="u2", app="a"), 0.0, True)
+    # other app unaffected
+    assert ctrl.allow(_turn(3, "s3", user="u2", app="b"), 0.0, True)
+
+
+def test_inflight_turns_always_pass():
+    ctrl = AdmissionController(AdmissionConfig(window_s=60, user_rate=1,
+                                               app_rate=1))
+    t0 = _turn(0, "s0", user="u", app="a")
+    later = _turn(1, "s0", user="u", app="a")
+    later.interaction_id, later.turn_index = 0, 1
+    assert ctrl.allow(t0, 0.0, True)
+    # window now full and the replica overloaded — but turn 1 is
+    # in-flight progress, not a new conversation: always admitted
+    assert ctrl.allow(later, 0.0, True)
+    assert not ctrl.allow(_turn(2, "s1", user="u", app="a"), 0.0, True)
+
+
+# -- BatchCore overload signals ----------------------------------------------
+
+def _sim(cm, admission, kv_budget=2_000, max_batch=4):
+    return Simulator(cm, make_scheduler("vtc"),
+                     SimConfig(max_batch=max_batch,
+                               kv_budget_tokens=kv_budget),
+                     admission=admission)
+
+
+def test_no_admission_is_never_overloaded(cm):
+    sim = _sim(cm, None)
+    assert sim.core.overloaded() is False
+
+
+def test_queue_backlog_triggers_overload(cm):
+    sim = _sim(cm, AdmissionConfig(queue_thresh=0.1, kv_thresh=1.0))
+    assert not sim.core.overloaded()
+    # park prompt backlog in the scheduler queues: 300 > 0.1 * 2000
+    sim.sched.on_arrival(_turn(0, "c", p=300), 0.0)
+    assert sim.core.overloaded()
+
+
+def test_throttled_requests_never_reach_queues(cm):
+    """Under forced overload + a 1-start window, later interactions are
+    rejected whole: terminal THROTTLED state, no scheduler queue entry,
+    no decode, and the stats/metrics agree."""
+    adm = AdmissionConfig(window_s=1_000.0, user_rate=1.0, app_rate=1.0,
+                          queue_thresh=0.05, kv_thresh=1.0)
+    sim = _sim(cm, adm, kv_budget=1_000, max_batch=1)
+    inters = []
+    for i in range(4):
+        turns = [_turn(10 * i + k, f"s{i}", p=200, o=30)
+                 for k in range(2)]
+        inters.append(Interaction(interaction_id=i, turns=turns,
+                                  user="u", app="a"))
+    res = sim.run(interactions=inters)
+    assert res.n_throttled > 0
+    throttled = [r for r in res.requests if r.state == THROTTLED]
+    finished = [r for r in res.requests if r.state == "finished"]
+    assert len(throttled) + len(finished) == len(res.requests)
+    assert all(r.generated == 0 and r.admit_time is None
+               for r in throttled)
+    # in-flight protection: any interaction whose turn 0 was admitted
+    # ran to completion — only whole interactions are rejected
+    admitted = {r.interaction_id for r in finished if r.turn_index == 0}
+    for inter in inters:
+        if inter.interaction_id in admitted:
+            assert all(t.state == "finished" for t in inter.turns)
+
+
+# -- metrics hardening --------------------------------------------------------
+
+def test_jain_degenerate_inputs():
+    assert jain([]) == 1.0
+    assert jain([0.0, 0.0]) == 1.0
+    assert jain([float("nan"), 5.0]) == 1.0     # NaN dropped, one sample
+
+
+def test_delivered_jain_counts_throttled_as_zero():
+    served = _turn(0, "a", p=100, o=10)
+    served.state = "finished"
+    served.generated = 10
+    starved = _turn(1, "b", p=100, o=10)
+    starved.state = THROTTLED
+    # population of two accounts, one at zero: Jain = (s)^2 / (2 s^2)
+    assert delivered_jain([served, starved]) == pytest.approx(0.5)
+    # fully-throttled population: uniformly zero is uniformly fair
+    starved2 = _turn(2, "c", p=100, o=10)
+    starved2.state = THROTTLED
+    assert delivered_jain([starved, starved2]) == 1.0
+    assert delivered_jain([]) == 1.0
+
+
+def test_summarize_fully_throttled_run(cm):
+    """A run where every interaction was rejected must summarize to
+    plain numbers — no NaN, no ZeroDivisionError."""
+    adm = AdmissionController(AdmissionConfig(window_s=1_000.0,
+                                              user_rate=1.0, app_rate=1.0,
+                                              queue_thresh=0.05,
+                                              kv_thresh=1.0))
+    # pre-poison the window so even the first start is rejected
+    adm.user_windows["u"].append(0.0)
+    adm.app_windows["a"].append(0.0)
+    sim = _sim(cm, adm, kv_budget=1_000, max_batch=1)
+    # park backlog so overloaded() is True from the first submit
+    sim.sched.on_arrival(_turn(99, "backlog", p=500, o=1), 0.0)
+    inters = [Interaction(interaction_id=i,
+                          turns=[_turn(i, f"s{i}", p=100, o=5)],
+                          user="u", app="a")
+              for i in range(3)]
+    res = sim.run(interactions=inters, max_time=50.0)
+    assert all(t.state == THROTTLED
+               for inter in inters for t in inter.turns)
+    s = summarize(res)
+    assert s["n_throttled"] == 3
+    assert s["jain_delivered"] == s["jain_delivered"]    # not NaN
+    assert s["wasted_tokens"] >= 0.0
+    assert s["goodput_tok_s"] >= 0.0
+
+
+def test_service_difference_stats_degenerate(cm):
+    sim = _sim(cm, None)
+    res = sim.run([])
+    d = service_difference_stats(res, "a", "b")
+    assert d["max"] == 0.0 and d["avg"] == 0.0
+
+
+# -- cluster threading --------------------------------------------------------
+
+def test_share_admission_state_aliases_windows():
+    a, b = AdmissionController(), AdmissionController()
+    share_admission_state([a, b])
+    a.user_windows["u"].append(1.0)
+    assert b.user_windows["u"] is a.user_windows["u"]
+    b.stats["n_throttled"] += 1
+    assert a.stats["n_throttled"] == 1
+
+
+def test_cluster_windows_are_global(cm):
+    """Spraying interaction starts across replicas hits ONE window:
+    the cluster throttles exactly as hard as a single replica would."""
+    adm = AdmissionConfig(window_s=1_000.0, user_rate=2.0, app_rate=2.0,
+                          queue_thresh=0.02, kv_thresh=1.0)
+    clu = make_sim_cluster(3, cm, scheduler="vtc",
+                           sim_cfg=SimConfig(max_batch=1,
+                                             kv_budget_tokens=1_500),
+                           policy="round_robin", admission=adm)
+    inters = []
+    for i in range(8):
+        inters.append(Interaction(
+            interaction_id=i,
+            turns=[_turn(10 * i + k, f"s{i}", p=300, o=30)
+                   for k in range(2)],
+            user="u", app="a"))
+    res = clu.run(interactions=inters)
+    n_thr = sum(r.state == THROTTLED for r in res.requests)
+    assert n_thr > 0
+    # one shared window: once every replica has work, the user's global
+    # start budget is spent.  Each replica admits while *it* is idle
+    # (overload is replica-local — an idle replica has capacity), so the
+    # ceiling is max(user_rate, n_replicas) = 3; per-replica windows
+    # would have admitted user_rate on EACH replica (6 starts).
+    started = {r.interaction_id for r in res.requests
+               if r.state == "finished" and r.turn_index == 0}
+    assert len(started) <= 3
+    # every admitted interaction ran all its turns (in-flight protection
+    # holds across replicas too)
+    for inter in inters:
+        if inter.interaction_id in started:
+            assert all(t.state == "finished" for t in inter.turns)
+
+
+def test_cluster_interaction_affinity(cm):
+    """Every turn of an interaction lands on the replica that served
+    turn 0 — later turns must hit their radix prefix."""
+    clu = make_sim_cluster(3, cm, scheduler="vtc",
+                           sim_cfg=SimConfig(max_batch=4,
+                                             kv_budget_tokens=20_000),
+                           policy="round_robin")
+    inters = []
+    for i in range(6):
+        inters.append(Interaction(
+            interaction_id=i,
+            turns=[_turn(10 * i + k, f"s{i}", p=40, o=8)
+                   for k in range(3)],
+            user=f"u{i % 2}", app="a"))
+    res = clu.run(interactions=inters)
+    assert all(r.state == "finished" for r in res.requests)
+    for inter in inters:
+        homes = {clu.routed_to[t.rid] for t in inter.turns}
+        assert len(homes) == 1, \
+            f"interaction {inter.interaction_id} visited replicas {homes}"
+    # affinity map recorded one home per interaction
+    assert set(clu.interaction_replica) == {i.interaction_id
+                                            for i in inters}

@@ -1,0 +1,233 @@
+"""Interactions as first-class objects (DESIGN.md §13).
+
+- `Interaction` API: turn metadata stamping, release gating, throttle
+  semantics, input validation.
+- Closed-loop release exactness: turn k's arrival equals turn k−1's
+  completion plus the pre-drawn think time, to float precision.
+- Account-granular billing: a chatty multi-session user gains no
+  fairness advantage over a single-session user with identical
+  aggregate demand (VTC counter difference bounded by one turn).
+- Billing decomposes: the account counter is exactly the sum of the
+  per-turn charges (property test over random turn shapes).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Request, SimConfig, Simulator, make_scheduler
+from repro.core.request import THROTTLED, Interaction
+from repro.serving.costmodel import A100_80G, CostModel
+from repro.workloads import multiturn_interactions
+
+from _hypothesis_compat import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama2-7b"), A100_80G)
+
+
+def _turn(rid, client, arrival=0.0, p=40, o=16):
+    return Request(rid=rid, client=client, arrival=arrival, prompt_len=p,
+                   output_len=o, keywords=("chat",))
+
+
+def _interaction(iid=0, n_turns=3, client="s0", user="u0", app="a0",
+                 think=1.0, arrival=0.0):
+    turns = [_turn(rid=iid * 100 + k, client=client, arrival=arrival)
+             for k in range(n_turns)]
+    thinks = [0.0] + [think] * (n_turns - 1)
+    return Interaction(interaction_id=iid, turns=turns, think_times=thinks,
+                       user=user, app=app)
+
+
+# -- Interaction API ----------------------------------------------------------
+
+def test_post_init_stamps_turn_metadata():
+    inter = _interaction(iid=7, n_turns=3)
+    for k, t in enumerate(inter.turns):
+        assert t.interaction_id == 7
+        assert t.turn_index == k
+        assert t.user == "u0" and t.app == "a0"
+        assert t.account == "u0@a0"
+
+
+def test_account_fallbacks():
+    r = _turn(0, "sess")
+    assert r.account == "sess"                  # no identity: session name
+    r.user = "alice"
+    assert r.account == "alice@-"               # user only
+    r.user, r.app = None, "chatapp"
+    assert r.account == "sess@chatapp"          # app only: session as user
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        Interaction(interaction_id=0, turns=[])
+    with pytest.raises(ValueError):
+        Interaction(interaction_id=0, turns=[_turn(0, "s")],
+                    think_times=[0.0, 1.0])
+
+
+def test_release_gating_and_restamping():
+    inter = _interaction(n_turns=3, think=2.5, arrival=1.0)
+    r0 = inter.next_request(now=0.0)
+    assert r0 is inter.turns[0]
+    assert r0.arrival == 1.0                    # turn 0 keeps its stamp
+    # turn 1 is not releasable until turn 0 completes
+    assert inter.next_request(now=5.0) is None
+    inter.mark_stage_complete(5.0)
+    r1 = inter.next_request(now=5.0)
+    assert r1 is inter.turns[1]
+    assert r1.arrival == 5.0 + 2.5              # completion + think time
+    inter.mark_stage_complete(9.0)
+    r2 = inter.next_request(now=9.0)
+    assert r2.arrival == 9.0 + 2.5
+    inter.mark_stage_complete(12.0)
+    assert inter.done
+    assert inter.next_request(now=12.0) is None  # exhausted
+
+
+def test_throttle_marks_unreleased_turns():
+    inter = _interaction(n_turns=3)
+    first = inter.next_request(now=0.0)
+    inter.throttle()
+    assert inter.done and inter.throttled
+    assert first.state != THROTTLED             # already released: untouched
+    assert all(t.state == THROTTLED for t in inter.turns[1:])
+    assert inter.next_request(now=1.0) is None
+
+
+def test_default_think_times_are_zero():
+    inter = Interaction(interaction_id=0,
+                        turns=[_turn(0, "s"), _turn(1, "s")])
+    assert inter.think_times == [0.0, 0.0]
+
+
+# -- closed-loop exactness ----------------------------------------------------
+
+def test_closed_loop_release_is_exact(cm):
+    """End-to-end through the simulator: every turn k>0 arrives at
+    exactly turn k−1's finish time plus the pre-drawn think time."""
+    inters = multiturn_interactions(n_users=3, n_apps=2,
+                                    sessions_per_user=2, seed=1)
+    sim = Simulator(cm, make_scheduler("vtc"),
+                    SimConfig(max_batch=4, kv_budget_tokens=20_000))
+    res = sim.run(interactions=inters)
+    assert all(r.state == "finished" for r in res.requests)
+    n_later_turns = 0
+    for inter in inters:
+        for k in range(1, len(inter.turns)):
+            prev, cur = inter.turns[k - 1], inter.turns[k]
+            assert cur.arrival == pytest.approx(
+                prev.finish_time + inter.think_times[k], abs=1e-9)
+            assert cur.arrival >= prev.finish_time   # never time-travels
+            n_later_turns += 1
+    assert n_later_turns > 0                    # the property wasn't vacuous
+
+
+def test_open_loop_requests_path_unchanged(cm):
+    """Flat request lists take the historical open-loop path: identical
+    result with and without the interactions keyword."""
+    def trace():
+        return [_turn(i, f"c{i % 2}", arrival=0.1 * i) for i in range(8)]
+    r1 = Simulator(cm, make_scheduler("vtc"),
+                   SimConfig(max_batch=4, kv_budget_tokens=20_000)
+                   ).run(trace())
+    r2 = Simulator(cm, make_scheduler("vtc"),
+                   SimConfig(max_batch=4, kv_budget_tokens=20_000)
+                   ).run(trace(), interactions=None)
+    assert [r.finish_time for r in r1.requests] == \
+           [r.finish_time for r in r2.requests]
+
+
+# -- chatty sessions cannot dodge the counters --------------------------------
+
+def test_chatty_user_gains_no_fairness_advantage(cm):
+    """A user spreading identical aggregate demand over 4 sessions ends
+    with the same VTC counter (within one turn's weighted tokens) as a
+    user pushing it through 1 session — sessions share the (user, app)
+    account, so session count is not a fairness lever."""
+    p, o, total_turns = 50, 20, 4
+    rid = [0]
+
+    def session_turns(n, client):
+        out = []
+        for _ in range(n):
+            out.append(_turn(rid[0], client, arrival=0.0, p=p, o=o))
+            rid[0] += 1
+        return out
+
+    inters = []
+    # chatty: 4 sessions x 1 turn, all arriving at t=0
+    for si in range(total_turns):
+        inters.append(Interaction(
+            interaction_id=si, turns=session_turns(1, f"chatty_s{si}"),
+            user="chatty", app="app0"))
+    # steady: 1 session x 4 turns, zero think time
+    inters.append(Interaction(
+        interaction_id=total_turns,
+        turns=session_turns(total_turns, "steady_s0"),
+        user="steady", app="app0"))
+
+    sched = make_scheduler("vtc")
+    sim = Simulator(cm, sched, SimConfig(max_batch=2,
+                                         kv_budget_tokens=2_000))
+    res = sim.run(interactions=inters)
+    assert all(r.state == "finished" for r in res.requests)
+
+    assert set(sched.counter) == {"chatty@app0", "steady@app0"}
+    per_turn = p + sched.w * o
+    diff = abs(sched.counter["chatty@app0"] - sched.counter["steady@app0"])
+    assert diff <= per_turn + 1e-9
+
+
+# -- billing decomposes into per-turn charges ---------------------------------
+
+def _charge_interaction(sched, turns):
+    """Drive one interaction's turns through a scheduler's billing
+    protocol directly (arrive → admit → decode → complete, in turn
+    order) and return the account charged."""
+    now = 0.0
+    for req in turns:
+        sched.on_arrival(req, now)
+        popped = sched.pop_next(now)
+        assert popped is req
+        sched.on_admit(req, now)
+        for _ in range(req.output_len):
+            now += 0.01
+            sched.on_token(req, now)
+        req.state = "finished"
+        sched.on_complete(req, now, latency=now - req.arrival,
+                          tps=100.0, util=0.5)
+    return turns[0].account
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 300), st.integers(1, 60)),
+                       min_size=1, max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_billing_is_sum_of_per_turn_charges(shapes):
+    """VTC bills an interaction exactly the sum of its turns' weighted
+    tokens — no session-boundary discount, no double charge."""
+    sched = make_scheduler("vtc")
+    turns = [_turn(k, "sess", p=p, o=o) for k, (p, o) in enumerate(shapes)]
+    inter = Interaction(interaction_id=0, turns=turns, user="u", app="a")
+    acct = _charge_interaction(sched, inter.turns)
+    expected = sum(p + sched.w * o for p, o in shapes)
+    assert sched.counter[acct] == pytest.approx(expected)
+
+
+def test_billing_sum_seeded_fallback():
+    """Seeded random-walk twin of the hypothesis property (runs without
+    hypothesis installed)."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        sched = make_scheduler("vtc")
+        shapes = [(int(rng.integers(1, 300)), int(rng.integers(1, 60)))
+                  for _ in range(int(rng.integers(1, 7)))]
+        turns = [_turn(k, "sess", p=p, o=o)
+                 for k, (p, o) in enumerate(shapes)]
+        inter = Interaction(interaction_id=0, turns=turns, user="u", app="a")
+        acct = _charge_interaction(sched, inter.turns)
+        expected = sum(p + sched.w * o for p, o in shapes)
+        assert sched.counter[acct] == pytest.approx(expected)

@@ -76,6 +76,7 @@ class Spy:
     def __init__(self):
         self.order, self.chunks, self.preempts = [], [], []
         self.budgets, self.victim_classes = [], []
+        self.throttles = []
 
     def on_admit(self, req, now):
         self.order.append(req.rid)
@@ -92,6 +93,9 @@ class Spy:
 
     def on_complete(self, req, now, **kw):
         pass
+
+    def on_throttle(self, req, now):
+        self.throttles.append(req.rid)
 
 
 def _sched(name, victim, cm):
@@ -260,3 +264,108 @@ def test_slo_dimension_not_vacuous():
     assert moved, "auto budgets only ever saturated at 0 or the cap"
     assert _slo_totals["preempts"] > 0
     assert _slo_totals["batch_victims"] > 0
+
+
+# -- admission dimension (DESIGN.md §13): {off, on} × fairness scheds ---------
+# admission on = closed-loop interaction trace behind overload-gated
+# per-user windows; both frontends must take the identical throttle
+# decisions (same rids, in order), identical admissions, and identical
+# TTFTs for everything that served.  admission off = the same
+# interactions with no controller — the closed-loop release itself must
+# also be in lockstep.
+from repro.core.request import Interaction            # noqa: E402
+from repro.serving.admission import AdmissionConfig   # noqa: E402
+
+ADM_SCHEDS = ("vtc", "equinox", "dlpm")
+ADM_CFG = dict(window_s=1_000.0, user_rate=2.0, app_rate=100.0,
+               kv_thresh=0.5, queue_thresh=0.25)
+
+_adm_totals = {"cells": 0, "throttled": 0, "later_turns": 0}
+
+
+def admission_trace():
+    """6 two-turn interactions from 2 users (u0 chatty: 4 sessions, u1:
+    2), outputs under-predicted 5× — overload comes from the same KV
+    pressure the main grid exercises, so with user_rate=2 the chatty
+    user's later session starts are the ones throttled."""
+    rng = np.random.default_rng(11)
+    inters, rid = [], 0
+    for i in range(6):
+        user = "u0" if i < 4 else "u1"
+        turns = []
+        for k in range(2):
+            plen = int(rng.integers(44, 60))
+            o = int(rng.integers(24, 36))
+            r = Request(rid=rid, client=f"sess{i}", arrival=0.05 * i,
+                        prompt_len=plen, output_len=o, keywords=("chat",),
+                        prompt_tokens=prompt_token_ids(
+                            ("chat",), plen, seed=500 + rid))
+            r.pred_output_len = max(1.0, o / 5)
+            r.pred_latency, r.pred_tps, r.pred_util = 0.05, 100.0, 0.5
+            turns.append(r)
+            rid += 1
+        inters.append(Interaction(interaction_id=i, turns=turns,
+                                  think_times=[0.0, 0.3],
+                                  user=user, app="a0"))
+    return inters
+
+
+@pytest.mark.parametrize("adm", (False, True), ids=("adm_off", "adm_on"))
+@pytest.mark.parametrize("sched", ADM_SCHEDS)
+def test_admission_parity_cell(cm, sched, adm):
+    kvb = KV_BUDGET[False]
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+
+    espy = Spy()
+    eng = ServingEngine(cfg, _sched(sched, "fair", cm), max_slots=4,
+                        max_len=96, kv_budget_tokens=kvb, cost_model=cm,
+                        backend="paged", page_size=16, chunked=True,
+                        prefill_chunk_tokens=16, observer=espy,
+                        admission=AdmissionConfig(**ADM_CFG) if adm
+                        else None)
+    done = eng.run(interactions=admission_trace())
+
+    sspy = Spy()
+    sim = Simulator(cm, _sched(sched, "fair", cm),
+                    SimConfig(max_batch=4, kv_budget_tokens=kvb,
+                              default_reserve=128, prefill_chunk=16,
+                              stall_free=True, adaptive_batching=True,
+                              kv_page_size=16),
+                    observer=sspy,
+                    admission=AdmissionConfig(**ADM_CFG) if adm else None)
+    res = sim.run(interactions=admission_trace())
+
+    assert espy.throttles == sspy.throttles  # identical throttle decisions
+    assert espy.order == sspy.order          # identical admissions
+    assert espy.chunks == sspy.chunks        # identical chunk plans
+    assert espy.preempts == sspy.preempts    # identical victims, in order
+    e = {r.rid: r for r in done}
+    s = {r.rid: r for r in res.requests if r.state == "finished"}
+    assert set(e) == set(s)
+    for rid in e:
+        assert e[rid].generated == e[rid].output_len
+        assert e[rid].ttft() == pytest.approx(s[rid].ttft(), abs=1e-9)
+        assert e[rid].e2e_latency() == pytest.approx(
+            s[rid].e2e_latency(), abs=1e-9)
+    if not adm:
+        assert not espy.throttles            # off arm throttles nothing
+        assert len(done) == 12
+    # closed-loop turn arrivals restamped identically on both sides
+    for rid in e:
+        if e[rid].turn_index > 0:
+            assert e[rid].arrival == pytest.approx(s[rid].arrival,
+                                                   abs=1e-9)
+            _adm_totals["later_turns"] += 1
+    _adm_totals["throttled"] += len(espy.throttles)
+    _adm_totals["cells"] += 1
+
+
+def test_admission_dimension_not_vacuous():
+    """Runs after the admission grid: the on arm genuinely throttled and
+    closed-loop later turns genuinely flowed through both frontends."""
+    if _adm_totals["cells"] < len(ADM_SCHEDS) * 2:
+        pytest.skip(f"only {_adm_totals['cells']}/{len(ADM_SCHEDS) * 2} "
+                    "admission grid cells ran in this process "
+                    "(selective run)")
+    assert _adm_totals["throttled"] > 0
+    assert _adm_totals["later_turns"] > 0
