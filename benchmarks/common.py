@@ -47,16 +47,63 @@ def predictor(kind: str, seed=0, epochs=20):
     return copy.deepcopy(_trained_predictor(kind, seed, epochs))
 
 
+def trace_enabled() -> bool:
+    """Flight-recorder switch for benchmark runs (DESIGN.md §14).
+
+    Off by default so ad-hoc ``mod.run()`` calls (and the determinism
+    test, which invokes benchmarks without ``BENCH_OUT``) never write
+    trace artifacts; ``benchmarks.run`` and CI opt in via
+    ``REPRO_TRACE=1``."""
+    return os.environ.get("REPRO_TRACE", "0").lower() not in ("", "0",
+                                                              "false")
+
+
+def maybe_recorder():
+    """A ``FlightRecorder`` when tracing is enabled, else ``None`` —
+    benchmarks pass the result straight to ``run_sim(recorder=...)`` or
+    compose it themselves with ``MultiObserver``."""
+    if not trace_enabled():
+        return None
+    from repro.serving.telemetry import FlightRecorder
+    return FlightRecorder()
+
+
+def write_trace_json(name: str, trace: dict, extra: dict = None):
+    """Perfetto-loadable timeline next to the bench result:
+    ``TRACE_<name>.json`` is pure Chrome trace-event format (load it at
+    https://ui.perfetto.dev), placed in ``BENCH_OUT`` like the
+    ``BENCH_*.json`` files CI uploads.  ``trace`` is a recorder trace
+    (``FlightRecorder.trace()`` or ``merge_traces`` output); returns the
+    path, or ``None`` when tracing is disabled."""
+    if not trace_enabled():
+        return None
+    from repro.serving.telemetry import to_chrome_trace
+    chrome = to_chrome_trace(trace)
+    if extra:
+        chrome["otherData"] = extra
+    out_dir = os.environ.get("BENCH_OUT", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"TRACE_{name}.json")
+    with open(path, "w") as f:
+        json.dump(chrome, f)
+    return path
+
+
 def run_sim(sched_name: str, wl, *, pred_kind=None, simcfg=None,
-            max_time=None, hf_params: HFParams = None, cm=CM):
+            max_time=None, hf_params: HFParams = None, cm=CM,
+            recorder=None):
     pred = predictor(pred_kind) if pred_kind else None
     kw = {}
     if sched_name == "equinox" and hf_params is not None:
         kw["params"] = hf_params
     sched = make_scheduler(sched_name, predictor=pred, **kw)
     obs = HFObserver()
+    observer = obs
+    if recorder is not None:
+        from repro.serving.telemetry import MultiObserver
+        observer = MultiObserver(obs, recorder)
     sim = Simulator(cm, sched, simcfg or SimConfig(max_batch=48),
-                    observer=obs)
+                    observer=observer)
     t0 = time.monotonic()
     res = sim.run(copy.deepcopy(list(wl)), max_time=max_time)
     wall = time.monotonic() - t0

@@ -84,11 +84,11 @@ SMOKE = dict(
                  max_time=100.0)))
 
 
-def _serve(tp, trace_name: str, throttled: bool):
+def _serve(tp, trace_name: str, throttled: bool, recorder=None):
     """One simulator run of one arm on one trace."""
     adm = AdmissionConfig(**tp["adm"]) if throttled else None
     sim = Simulator(CM, make_scheduler("vtc"), SimConfig(**tp["sim"]),
-                    admission=adm)
+                    admission=adm, observer=recorder)
     t0 = time.monotonic()
     if trace_name == "multiturn":
         res = sim.run(interactions=multiturn_interactions(**tp["trace"]))
@@ -106,13 +106,25 @@ def _serve(tp, trace_name: str, throttled: bool):
 
 
 def run(quick: bool = False):
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import maybe_recorder, write_trace_json
+    except ImportError:                    # direct script execution
+        from common import maybe_recorder, write_trace_json
+
     params = SMOKE if quick else FULL
-    out, gates = [], []
-    for trace_name in ("multiturn", "diurnal"):
+    out, gates, traces = [], [], []
+    for arm_idx, trace_name in enumerate(("multiturn", "diurnal")):
         tp = params[trace_name]
         arms = {}
-        for arm in ("unthrottled", "throttled"):
-            m, wall = _serve(tp, trace_name, throttled=(arm == "throttled"))
+        for sub, arm in enumerate(("unthrottled", "throttled")):
+            rec = maybe_recorder()
+            m, wall = _serve(tp, trace_name, throttled=(arm == "throttled"),
+                             recorder=rec)
+            if rec is not None:
+                # one Perfetto "process" per (trace, arm) so the four
+                # runs land side by side on the shared modeled clock
+                rec.set_replica(arm_idx * 2 + sub)
+                traces.append(rec.trace())
             arms[arm] = m
             out.append(
                 f"overload_admission/{trace_name}_{arm},{wall * 1e6:.0f},"
@@ -137,6 +149,9 @@ def run(quick: bool = False):
             f"wasted_thr={th['wasted']:.0f} wasted_un={un['wasted']:.0f} "
             f"jain_thr={th['jain']:.3f} jain_un={un['jain']:.3f} ok={ok}")
     out.append(f"overload_admission/summary,0,ok={all(gates)}")
+    if traces:
+        from repro.serving.telemetry import merge_traces
+        write_trace_json("overload_admission", merge_traces(traces))
     return out
 
 

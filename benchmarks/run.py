@@ -12,6 +12,7 @@ output directory).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -38,6 +39,8 @@ BENCHES = [
                        "budgets vs static chunking, TTFT/TBT attainment"),
     ("overload_admission", "DESIGN.md §13: overload-aware admission — "
                            "throttled vs unthrottled under 3x overload"),
+    ("telemetry_overhead", "DESIGN.md §14: flight-recorder cost — "
+                           "recorder-on vs off on a saturated trace"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),
@@ -49,6 +52,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
     args = ap.parse_args()
+
+    # the harness opts into flight-recorder traces (TRACE_<name>.json
+    # next to BENCH_<name>.json, DESIGN.md §14); direct mod.run() calls
+    # — unit tests, the determinism pin — stay trace-free by default
+    os.environ.setdefault("REPRO_TRACE", "1")
 
     print("name,us_per_call,derived")
     failures = 0

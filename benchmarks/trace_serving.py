@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import CM, row
+from benchmarks.common import CM, maybe_recorder, row, write_trace_json
 from repro.configs import SMOKE_FACTORIES
 from repro.core import jain, make_scheduler
 from repro.predictor import MoPE
@@ -26,9 +26,9 @@ def _scaled_predictor():
 
 def run(quick=False):
     n_per = 10 if quick else 24
-    out = []
-    for sched_name, pred_kind in (("fcfs", None), ("vtc", None),
-                                  ("equinox", "mope")):
+    out, traces = [], []
+    for arm_idx, (sched_name, pred_kind) in enumerate(
+            (("fcfs", None), ("vtc", None), ("equinox", "mope"))):
         reqs = sharegpt_like(n_clients=4, n_per_client=n_per,
                              rate_per_client=8.0, seed=5)
         for r in reqs:                       # shrink for the CPU model
@@ -38,11 +38,18 @@ def run(quick=False):
         sched = make_scheduler(sched_name, predictor=pred)
         cfg = SMOKE_FACTORIES["llama2-7b"]()
         from repro.serving.engine import ServingEngine
+        rec = maybe_recorder()
         eng = ServingEngine(cfg, sched, max_slots=3, max_len=256,
-                            cost_model=CM, kv_budget_tokens=400)
+                            cost_model=CM, kv_budget_tokens=400,
+                            observer=rec)
         t0 = time.monotonic()
         done = eng.run(reqs)
         wall = time.monotonic() - t0
+        if rec is not None:
+            # one Perfetto "process" per scheduler arm, side by side on
+            # the shared modeled clock
+            rec.set_replica(arm_idx)
+            traces.append(rec.trace())
         ttfts = np.array([r.ttft() for r in done if r.ttft() is not None])
         thr = sum(r.prompt_len + r.generated for r in done) / max(
             eng.t_model, 1e-9)
@@ -54,4 +61,7 @@ def run(quick=False):
                        f"p90ttft={np.percentile(ttfts, 90):.3f}s "
                        f"jain_svc={jain(list(sched.service.values())):.3f} "
                        f"iters={eng.iterations}"))
+    if traces:
+        from repro.serving.telemetry import merge_traces
+        write_trace_json("trace_serving", merge_traces(traces))
     return out

@@ -10,7 +10,12 @@ Fails (exit 1) if:
 - any `benchmarks/*.py` module is missing from the `BENCHES` registry
   in `benchmarks/run.py` (or registered but missing on disk) — an
   unregistered benchmark silently escapes the CI artifact upload and
-  the determinism pin (`tests/test_bench_determinism.py`).
+  the determinism pin (`tests/test_bench_determinism.py`);
+- any flight-recorder event type (`EVENT_TYPES` in
+  `src/repro/serving/telemetry.py`) is not documented in the DESIGN.md
+  event-schema section — the trace format is a contract (replay and
+  external Perfetto tooling parse it), so new lifecycle events must
+  land with their schema row.
 
     python scripts/check_docs.py
 """
@@ -93,11 +98,35 @@ def check_bench_registry(errors):
                       f"benchmarks/{name}.py on disk")
 
 
+EVENT_TYPES_RE = re.compile(r"^EVENT_TYPES\s*=\s*\((.*?)^\)", re.M | re.S)
+
+
+def check_telemetry_schema(errors):
+    tel = ROOT / "src" / "repro" / "serving" / "telemetry.py"
+    design = ROOT / "DESIGN.md"
+    if not tel.exists():
+        return
+    m = EVENT_TYPES_RE.search(tel.read_text())
+    if not m:
+        errors.append("src/repro/serving/telemetry.py: EVENT_TYPES tuple "
+                      "not found (check_docs parses it literally)")
+        return
+    types = re.findall(r"\"([a-z_]+)\"", m.group(1))
+    doc = design.read_text() if design.exists() else ""
+    for t in types:
+        if f"`{t}`" not in doc:
+            errors.append(
+                f"DESIGN.md: flight-recorder event type `{t}` "
+                f"(telemetry.EVENT_TYPES) is missing from the event-schema "
+                f"section — document it before shipping the event")
+
+
 def main() -> int:
     errors: list[str] = []
     check_section_citations(errors)
     check_markdown_links(errors)
     check_bench_registry(errors)
+    check_telemetry_schema(errors)
     if errors:
         print(f"check_docs: {len(errors)} broken cross-reference(s)")
         for e in errors:

@@ -16,9 +16,10 @@ import numpy as np
 
 from repro.core import counters as C
 from repro.core.request import Request
+from repro.serving.telemetry import Observer
 
 
-class HFObserver:
+class HFObserver(Observer):
     """Accumulates UFC/RFC per fairness account (``Request.account`` —
     the session name for flat traces, user@app for interactions,
     DESIGN.md §13) from actual post-execution metrics."""
@@ -100,14 +101,27 @@ def service_difference_stats(result, c1: str, c2: str,
             "var": float(d.var())}
 
 
+def percentile_or_none(xs, q: float):
+    """``np.percentile`` that is uniformly ``None`` on empty input —
+    every percentile field in ``summarize`` uses this, so callers never
+    have to guess which fields can be None (all of them, exactly when
+    the underlying sample set is empty)."""
+    xs = np.asarray(xs)
+    return float(np.percentile(xs, q)) if len(xs) else None
+
+
 def summarize(result, clients: List[str] = None) -> dict:
     ttfts = result.ttfts()
     lats = result.latencies()
+    tbts = np.array([t for t in (r.tbt() for r in result.requests)
+                     if t is not None])
     out = {
         "throughput_tok_s": result.throughput_tokens_per_s(),
         "mean_util": result.mean_util(),
-        "p50_ttft": float(np.percentile(ttfts, 50)) if len(ttfts) else None,
-        "p90_ttft": float(np.percentile(ttfts, 90)) if len(ttfts) else None,
+        "p50_ttft": percentile_or_none(ttfts, 50),
+        "p90_ttft": percentile_or_none(ttfts, 90),
+        "p99_ttft": percentile_or_none(ttfts, 99),
+        "p99_tbt": percentile_or_none(tbts, 99),
         "mean_latency": float(lats.mean()) if len(lats) else None,
         "finished": sum(r.state == "finished" for r in result.requests),
         "total": len(result.requests),

@@ -268,6 +268,9 @@ class Simulator:
 
         # token production
         done_now = []
+        obs = self.observer
+        produced = [] if obs is not None else None
+        first = [] if obs is not None else None
         for r in self.running:
             if r.state == PREFILLING and r.prefill_done >= r.prompt_len:
                 r.state = DECODING
@@ -278,9 +281,14 @@ class Simulator:
                     r.first_token_time = t
                 self.core.note_prefill_complete(r, t)
                 self.sched.on_token(r, t, 1)
+                if obs is not None:
+                    produced.append(r)
+                    first.append(r.rid)
             elif r.state == DECODING:
                 r.generated += 1
                 self.sched.on_token(r, t, 1)
+                if obs is not None:
+                    produced.append(r)
             if r.state == DECODING and r.generated >= r.output_len:
                 r.state = FINISHED
                 r.finish_time = t
@@ -289,6 +297,13 @@ class Simulator:
         # completions -> feedback loop (BatchCore closes Algorithm 1)
         iter_tokens = prefill_tokens + len(decoding)
         util = self.core.iteration_util(t_iter, fresh, len(self.running))
+        if obs is not None:
+            # per-iteration sample BEFORE the completion feedback, so the
+            # replay oracle sees token charges and completion
+            # reconciliation in the same order the scheduler did
+            obs.on_iteration(t, t_iter=t_iter, util=util, fresh=fresh,
+                             running=self.running, produced=produced,
+                             first=first)
         for r in done_now:
             self.running.remove(r)
             self.core.release_kv(r)

@@ -53,6 +53,10 @@ class BasePredictor:
         # pred_output_len un-scaled by whatever the bias is at completion
         # time (it drifts under concurrent completions)
         req._pred_raw = raw
+        # stamp the routing regime (MoPE expert index; 0 for single-proxy
+        # predictors) so the flight recorder's admit events can audit
+        # per-expert prediction accuracy offline (DESIGN.md §14)
+        req._pred_regime = self._regime(req)
         if self.calibrate:
             raw *= self._bias.get(self._regime(req), 1.0)
         req.pred_output_len = max(raw, 1.0)

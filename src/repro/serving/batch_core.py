@@ -44,6 +44,7 @@ from repro.core.request import (DECODING, FINISHED, PREEMPTED, PREFILLING,
 from repro.core.schedulers import SchedulerBase
 from repro.serving.admission import as_controller
 from repro.serving.costmodel import CostModel
+from repro.serving.telemetry import Observer
 
 
 @dataclasses.dataclass
@@ -113,6 +114,14 @@ class BatchCore:
         self.sched = scheduler
         self.cm = cost_model
         self.cfg = cfg or BatchConfig()
+        if observer is not None and not isinstance(observer, Observer):
+            # formal hook protocol (DESIGN.md §14): duck-typed observers
+            # made a typo'd hook name fail silently — the base class
+            # validates override names at class-definition time
+            raise TypeError(
+                f"observer must be a repro.serving.telemetry.Observer "
+                f"(got {type(observer).__name__}); subclass it so hook "
+                f"names are checked instead of hasattr-guessed")
         self.observer = observer
         self.prefix_cache = prefix_cache      # repro.serving.prefix_cache
         #   (property: also threads the locality probe into the scheduler)
@@ -131,6 +140,8 @@ class BatchCore:
         self.on_turn_release = None     # driver hook: next turn -> arrivals
         self.throttled: List[Request] = []
         self.wasted_tokens = 0.0        # recompute waste from preemptions
+        if observer is not None:
+            observer.bind_core(self)    # after budgets/config are final
 
     # -- locality probe threading (DESIGN.md §11) ----------------------------
     @property
@@ -201,6 +212,8 @@ class BatchCore:
     def _requeue(self, req: Request, now: float):
         self.sched.queues[req.account].appendleft(req)
         self.sched.on_requeue(req, now)
+        if self.observer is not None:
+            self.observer.on_requeue(req, now)
 
     # -- overload-aware admission (DESIGN.md §13) ----------------------------
     def register_interaction(self, inter):
@@ -233,9 +246,10 @@ class BatchCore:
         when the request (necessarily a turn-0: in-flight turns always
         pass) was throttled; the whole interaction is then rejected and
         its unreleased turns are marked THROTTLED."""
-        if self.admission is None:
-            return True
-        if self.admission.allow(req, now, self.overloaded()):
+        if self.admission is None \
+                or self.admission.allow(req, now, self.overloaded()):
+            if self.observer is not None:
+                self.observer.on_arrival(req, now)
             return True
         req.state = THROTTLED
         self.throttled.append(req)
@@ -243,8 +257,7 @@ class BatchCore:
                  if req.interaction_id is not None else None)
         if inter is not None:
             inter.throttle()
-        if self.observer is not None and hasattr(self.observer,
-                                                 "on_throttle"):
+        if self.observer is not None:
             self.observer.on_throttle(req, now)
         return False
 
@@ -366,8 +379,7 @@ class BatchCore:
         self.n_preemptions += 1
         self.sched.on_preempt(req, now)
         self.sched.queues[req.account].appendleft(req)
-        if self.observer is not None and hasattr(self.observer,
-                                                 "on_preempt"):
+        if self.observer is not None:
             self.observer.on_preempt(req, now)
         return req
 
@@ -516,8 +528,7 @@ class BatchCore:
         else:
             order = prefilling
         self.last_prefill_budget = budget
-        if self.observer is not None and hasattr(self.observer,
-                                                 "on_prefill_budget"):
+        if self.observer is not None:
             self.observer.on_prefill_budget(budget)
         plan: List[tuple] = []
         for r in order:
@@ -527,8 +538,7 @@ class BatchCore:
             r.prefill_done += chunk
             budget -= chunk
             plan.append((r, chunk))
-            if self.observer is not None and hasattr(self.observer,
-                                                     "on_prefill_chunk"):
+            if self.observer is not None:
                 self.observer.on_prefill_chunk(r, chunk)
         return plan
 
@@ -619,4 +629,6 @@ class BatchCore:
                 nxt = inter.next_request(now)
                 if nxt is not None and self.on_turn_release is not None:
                     self.on_turn_release(nxt, now)
+                    if self.observer is not None:
+                        self.observer.on_turn_release(nxt, now)
         return exec_lat, tps, util

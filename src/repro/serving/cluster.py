@@ -58,6 +58,7 @@ from repro.core.schedulers import SchedulerBase, make_scheduler
 from repro.core.simulator import SimConfig, Simulator
 from repro.serving.admission import as_controller, share_admission_state
 from repro.serving.costmodel import CostModel
+from repro.serving.telemetry import Observer
 
 # Per-client fairness containers that must be cluster-global.  Queues are
 # deliberately NOT shared — they are the per-replica dispatch outcome.
@@ -288,14 +289,14 @@ class ClusterResult:
         return hit / max(seen, 1) if seen else None
 
     def summary(self) -> dict:
+        from repro.core.metrics import percentile_or_none
         ttfts = self.ttfts()
         lats = self.latencies()
         return {
             "throughput_tok_s": self.throughput_tokens_per_s(),
-            "p50_ttft": float(np.percentile(ttfts, 50)) if len(ttfts)
-            else None,
-            "p90_ttft": float(np.percentile(ttfts, 90)) if len(ttfts)
-            else None,
+            "p50_ttft": percentile_or_none(ttfts, 50),
+            "p90_ttft": percentile_or_none(ttfts, 90),
+            "p99_ttft": percentile_or_none(ttfts, 99),
             "mean_latency": float(lats.mean()) if len(lats) else None,
             "jain": self.jain_index(),
             "finished": sum(r.state == FINISHED for r in self.requests),
@@ -330,6 +331,13 @@ class Cluster:
         self.policy = policy
         self._rr = 0
         self.routed_to: Dict[int, int] = {}
+        # telemetry (DESIGN.md §14): stamp each replica's observer with
+        # its index so per-replica flight-recorder traces can be merged
+        # on the shared modeled clock (one Perfetto process per replica)
+        for i, rep in enumerate(replicas):
+            obs = getattr(getattr(rep, "core", None), "observer", None)
+            if obs is not None:
+                obs.set_replica(i)
         # interaction -> replica pin (DESIGN.md §13): later turns must
         # land where their history's radix pages live, whatever the
         # load-balancing policy would prefer
@@ -453,15 +461,23 @@ def make_sim_cluster(n_replicas: int, cost_model: CostModel = None, *,
     cluster.  ``admission`` (an ``AdmissionConfig`` or a ready
     controller, DESIGN.md §13) is normalized to ONE controller handed to
     every replica, so the sliding windows are cluster-global regardless
-    of ``share_counters``."""
+    of ``share_counters``.
+
+    ``observer`` is either one ``telemetry.Observer`` shared by every
+    replica (e.g. an ``HFObserver`` accumulating cluster-wide UFC/RFC)
+    or a callable ``replica_index -> Observer`` factory — the flight-
+    recorder path (DESIGN.md §14): each replica gets its own recorder,
+    ``Cluster`` stamps the indices, ``merge_traces`` joins the streams."""
     cms = list(cost_models) if cost_models is not None \
         else [cost_model] * n_replicas
     if len(cms) != n_replicas or any(c is None for c in cms):
         raise ValueError("provide cost_model or n_replicas cost_models")
     ctrl = as_controller(admission)
     reps = []
-    for cm in cms:
+    for i, cm in enumerate(cms):
         sched = make_scheduler(scheduler, predictor=predictor, **sched_kw)
+        obs = observer(i) if callable(observer) \
+            and not isinstance(observer, Observer) else observer
         reps.append(Simulator(cm, sched, sim_cfg or SimConfig(),
-                              observer=observer, admission=ctrl))
+                              observer=obs, admission=ctrl))
     return Cluster(reps, policy=policy, share_counters=share_counters)

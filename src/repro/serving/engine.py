@@ -466,6 +466,9 @@ class ServingEngine:
         #    stamping at admission under-reported TTFT by the entire
         #    prefill iteration.
         done_now = []
+        obs = self.core.observer
+        produced = [] if obs is not None else None
+        first = [] if obs is not None else None
         for req, row in done_prefill:
             self._install_prefill(req, row)
             req.state = DECODING
@@ -476,6 +479,9 @@ class ServingEngine:
                 req.first_token_time = now
             self.core.note_prefill_complete(req, now)
             self.sched.on_token(req, now, 1)
+            if obs is not None:
+                produced.append(req)
+                first.append(req.rid)
             if req.generated >= req.output_len:
                 done_now.append(req)
         for req in decoding:
@@ -483,8 +489,16 @@ class ServingEngine:
             req._pos += 1
             req.generated += 1
             self.sched.on_token(req, now, 1)
+            if obs is not None:
+                produced.append(req)
             if req.generated >= req.output_len:   # synthetic EOS
                 done_now.append(req)
+        if obs is not None:
+            # sample before the completion feedback (mirrors Simulator.
+            # step) so replay sees hook calls in the scheduler's order
+            obs.on_iteration(now, t_iter=t_iter, util=util, fresh=fresh,
+                             running=self.running, produced=produced,
+                             first=first)
 
         # completions -> feedback loop (BatchCore closes Algorithm 1)
         n_running = len(self.running)

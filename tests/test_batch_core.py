@@ -8,6 +8,7 @@ from repro.core import Request, SimConfig, Simulator, make_scheduler
 from repro.serving.batch_core import BatchConfig, BatchCore
 from repro.serving.costmodel import A100_80G, CostModel
 from repro.serving.engine import ServingEngine
+from repro.serving.telemetry import Observer
 
 
 @pytest.fixture(scope="module")
@@ -24,7 +25,7 @@ def mk_reqs(n=10, seed=0, clients=2, arrival_step=0.0):
                     keywords=("chat",)) for i in range(n)]
 
 
-class AdmitSpy:
+class AdmitSpy(Observer):
     """Observer recording admission order and per-iteration chunk plans
     (the two scheduling decisions BatchCore owns)."""
 

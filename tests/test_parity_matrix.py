@@ -28,6 +28,7 @@ from repro.configs import SMOKE_FACTORIES, get_config
 from repro.core import Request, SimConfig, Simulator, make_scheduler
 from repro.core.request import set_slo
 from repro.predictor import ScaledOracle
+from repro.serving.telemetry import Observer
 from repro.serving.costmodel import A100_80G, CostModel
 from repro.serving.engine import ServingEngine
 from repro.workloads.vocab import prompt_token_ids
@@ -70,7 +71,7 @@ def matrix_trace():
     return reqs
 
 
-class Spy:
+class Spy(Observer):
     """Records the scheduling decisions BatchCore owns."""
 
     def __init__(self):

@@ -20,6 +20,7 @@ from repro.core import Request, SimConfig, Simulator, make_scheduler
 from repro.core.request import DECODING, PREEMPTED
 from repro.core.schedulers import VTC, Equinox
 from repro.serving.batch_core import BatchConfig, BatchCore
+from repro.serving.telemetry import Observer
 from repro.serving.costmodel import A100_80G, CostModel
 from repro.serving.kv_cache import PagePool
 from repro.serving.prefix_cache import PrefixCache
@@ -38,7 +39,7 @@ def _req(rid, client="c", arrival=0.0, p=20, o=40, pred=None):
     return r
 
 
-class PreemptSpy:
+class PreemptSpy(Observer):
     """Observer recording the three scheduling decisions BatchCore owns:
     admissions, chunk plans and preemption victims."""
 

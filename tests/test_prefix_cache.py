@@ -12,6 +12,7 @@ from repro.core import Request, SimConfig, Simulator, make_scheduler
 from repro.serving.costmodel import A100_80G, CostModel
 from repro.serving.kv_cache import PagePool
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.telemetry import Observer
 from repro.workloads import multiturn_sharegpt_like
 from repro.workloads.vocab import prompt_token_ids
 
@@ -331,7 +332,7 @@ def test_parity_admissions_chunks_ttft_with_cache(cm):
     decisions and identical TTFT/e2e latencies."""
     from repro.serving.engine import ServingEngine
 
-    class Spy:
+    class Spy(Observer):
         def __init__(self):
             self.order, self.chunks = [], []
 
