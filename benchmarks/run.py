@@ -41,6 +41,8 @@ BENCHES = [
                            "throttled vs unthrottled under 3x overload"),
     ("telemetry_overhead", "DESIGN.md §14: flight-recorder cost — "
                            "recorder-on vs off on a saturated trace"),
+    ("sim_scale", "DESIGN.md §15: event-driven macro-stepping — "
+                  "steady-decode speedup + provider-scale wall time"),
     ("cluster_scaling", "Beyond-paper: 1-8 replica fair cluster serving"),
     ("rpm_baseline", "Sec 1: static RPM quotas waste off-peak capacity"),
     ("roofline", "Deliverable (g): three-term roofline per arch x shape"),

@@ -1,0 +1,166 @@
+"""Event-driven macro-stepping gate (DESIGN.md §15).
+
+Two sections:
+
+- **probe_*** — a steady-decode microbenchmark: 32 single-request
+  clients (pairwise-distinct accounts, the bulk-path precondition)
+  admitted at t=0 and decoded to completion.  Once prefill drains the
+  batch is scheduling-quiet to the horizon, so the macro path advances
+  hundreds of iterations per pass while the legacy arm pays the full
+  per-iteration loop.  Carries the **speedup gate**: the macro arm must
+  be ≥ 10× faster.  Results are bit-identical by construction — that
+  is pinned policy-by-policy in ``tests/test_macro_equivalence.py``,
+  so the bench gates only speed.
+- **zipf** — the provider-scale trace (``workloads.zipf_scale``): 10⁴
+  Zipf-popularity clients, 2·10⁵ requests in distinct-client bursts,
+  run under the macro simulator.  Carries the **wall-time gate**:
+  < 120 s.  This is the workload class the §15 refactor exists for —
+  the scheduler backlog index keeps per-iteration cost O(backlog)
+  instead of O(all clients), and the macro-stepper skips the
+  steady-decode stretches between bursts.
+
+Unlike the other ``--smoke`` modes, the smoke gate here runs the
+**full** provider-scale trace (the wall-time bound *is* the
+acceptance criterion); only the probe repeats shrink.  ``run(quick=
+True)`` — the determinism pin's path — shrinks the trace too.  All
+derived fields are structural (finished counts, iteration counts,
+modeled sim time), so rows are bit-deterministic; wall times live in
+the volatile ``us`` column only.
+
+    PYTHONPATH=src python benchmarks/sim_scale.py --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+from repro.core import SimConfig, Simulator, make_scheduler
+from repro.core.request import Request
+from repro.workloads import zipf_scale
+
+SPEEDUP_GATE = 10.0
+WALL_GATE_S = 120.0
+
+
+def _cm():
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import CM
+    except ImportError:                    # direct script execution
+        from common import CM
+    return CM
+
+
+def _probe_reqs(out_len: int):
+    return [Request(rid=i, client=f"acct{i:02d}", arrival=0.0,
+                    prompt_len=32, output_len=out_len, keywords=("chat",))
+            for i in range(32)]
+
+
+def _probe_once(macro: bool, out_len: int):
+    sim = Simulator(_cm(), make_scheduler("vtc"),
+                    SimConfig(max_batch=32, macro_step=macro))
+    reqs = _probe_reqs(out_len)
+    gc.collect()
+    t0 = time.process_time()
+    res = sim.run(reqs)
+    return res, time.process_time() - t0
+
+
+def _zipf_trace(quick: bool):
+    if quick:
+        return zipf_scale(n_clients=2000, n_requests=16_000, duration=320.0)
+    return zipf_scale()                    # 10⁴ clients, 2·10⁵ requests
+
+
+def run(quick: bool = False):
+    out = []
+
+    # -- steady-decode probe (speedup gate) -------------------------------
+    out_len = 256 if quick else 512
+    repeats = 2 if quick else 3
+    walls = {"legacy": [], "macro": []}
+    last = {}
+    for _ in range(repeats):
+        for arm, macro in (("legacy", False), ("macro", True)):
+            res, cpu = _probe_once(macro, out_len)
+            walls[arm].append(cpu)
+            last[arm] = res
+    for arm in ("legacy", "macro"):
+        res = last[arm]
+        fin = sum(r.state == "finished" for r in res.requests)
+        out.append(f"sim_scale/probe_{arm},{min(walls[arm]) * 1e6:.0f},"
+                   f"finished={fin}/{len(res.requests)} "
+                   f"iters={len(res.timeline.t)} "
+                   f"sim_time={res.sim_time:.4f}")
+
+    # -- provider-scale trace (wall-time gate) ----------------------------
+    wl = _zipf_trace(quick)
+    n_clients = len({r.client for r in wl})
+    sim = Simulator(_cm(), make_scheduler("vtc"),
+                    SimConfig(max_batch=128, macro_step=True))
+    gc.collect()
+    t0 = time.perf_counter()
+    res = sim.run(wl)
+    wall = time.perf_counter() - t0
+    fin = sum(r.state == "finished" for r in res.requests)
+    out.append(f"sim_scale/zipf{'_quick' if quick else ''},"
+               f"{wall * 1e6:.0f},"
+               f"finished={fin}/{len(res.requests)} clients={n_clients} "
+               f"iters={len(res.timeline.t)} sim_time={res.sim_time:.1f}")
+    return out
+
+
+def _gates(lines):
+    """(probe speedup, zipf wall seconds) from the volatile us column."""
+    us = {}
+    for line in lines:
+        name, col, _ = line.split(",", 2)
+        us[name.rsplit("/", 1)[-1]] = float(col)
+    zipf = us.get("zipf", us.get("zipf_quick"))
+    return us["probe_legacy"] / max(us["probe_macro"], 1.0), zipf / 1e6
+
+
+def main():
+    import argparse
+
+    try:                                   # python -m benchmarks.run
+        from benchmarks.common import write_bench_json
+    except ImportError:                    # direct script execution
+        from common import write_bench_json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: full provider-scale trace (the "
+                         "wall-time bound is the acceptance criterion), "
+                         "reduced probe repeats")
+    args = ap.parse_args()
+    # the smoke gate must time the real 10⁴-client trace — quick=True
+    # (the determinism pin's path) is NOT the gated configuration
+    lines = run(quick=False)
+    for line in lines:
+        print(line, flush=True)
+    speedup, zipf_wall = _gates(lines)
+    print(f"# steady-decode macro speedup: {speedup:.1f}x (gate >= "
+          f"{SPEEDUP_GATE:.0f}x); provider-scale wall: {zipf_wall:.1f}s "
+          f"(gate < {WALL_GATE_S:.0f}s)", flush=True)
+    write_bench_json("sim_scale", lines,
+                     {"speedup": speedup, "zipf_wall_s": zipf_wall,
+                      "smoke": args.smoke})
+    if speedup < SPEEDUP_GATE:
+        raise SystemExit(
+            f"sim_scale gate failed: macro-stepping sped up the "
+            f"steady-decode probe only {speedup:.1f}x (gate "
+            f">= {SPEEDUP_GATE:.0f}x); check stable_horizon engagement "
+            f"(a batch that never goes all-DECODING falls back to the "
+            f"legacy loop)")
+    if zipf_wall >= WALL_GATE_S:
+        raise SystemExit(
+            f"sim_scale gate failed: the 10⁴-client / 2·10⁵-request "
+            f"trace took {zipf_wall:.1f}s (gate < {WALL_GATE_S:.0f}s); "
+            f"check the scheduler backlog index (per-iteration cost "
+            f"must stay O(backlog), not O(all clients)) and macro-burst "
+            f"engagement between arrival bursts")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,11 @@ Fails (exit 1) if:
   `src/repro/serving/telemetry.py`) is not documented in the DESIGN.md
   event-schema section — the trace format is a contract (replay and
   external Perfetto tooling parse it), so new lifecycle events must
-  land with their schema row.
+  land with their schema row;
+- any field of the `IterationOutcome` dataclass
+  (`src/repro/serving/batch_core.py`) is missing from DESIGN.md §15 —
+  it is the return contract both frontends and the macro-step fast
+  path share, so a new field must land with its documentation row.
 
     python scripts/check_docs.py
 """
@@ -121,12 +125,38 @@ def check_telemetry_schema(errors):
                 f"section — document it before shipping the event")
 
 
+OUTCOME_RE = re.compile(
+    r"^class IterationOutcome:.*?(?=^(?:@|class)\s)", re.M | re.S)
+OUTCOME_FIELD_RE = re.compile(r"^    (\w+)\s*:", re.M)
+
+
+def check_iteration_outcome(errors):
+    core = ROOT / "src" / "repro" / "serving" / "batch_core.py"
+    design = ROOT / "DESIGN.md"
+    if not core.exists():
+        return
+    m = OUTCOME_RE.search(core.read_text())
+    if not m:
+        errors.append("src/repro/serving/batch_core.py: IterationOutcome "
+                      "dataclass not found (check_docs parses it literally)")
+        return
+    fields = OUTCOME_FIELD_RE.findall(m.group(0))
+    doc = design.read_text() if design.exists() else ""
+    for f in fields:
+        if f"`{f}`" not in doc:
+            errors.append(
+                f"DESIGN.md: IterationOutcome field `{f}` "
+                f"(serving/batch_core.py) is missing from §15 — it is the "
+                f"shared iteration contract; document it before shipping")
+
+
 def main() -> int:
     errors: list[str] = []
     check_section_citations(errors)
     check_markdown_links(errors)
     check_bench_registry(errors)
     check_telemetry_schema(errors)
+    check_iteration_outcome(errors)
     if errors:
         print(f"check_docs: {len(errors)} broken cross-reference(s)")
         for e in errors:

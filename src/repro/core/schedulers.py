@@ -71,8 +71,22 @@ class SchedulerBase:
         self.arrived_clients = set()
         # per-client in-batch request count (admitted, not yet completed
         # or preempted) — with the queues this defines the *active* client
-        # set the VTC no-gaming lift is taken over
+        # set the VTC no-gaming lift is taken over.  Entries are removed
+        # when they reach zero so ``active_clients`` stays O(active), not
+        # O(every client that ever ran).
         self.inflight: Dict[str, int] = collections.defaultdict(int)
+        # Backlog index (DESIGN.md §15): the clients that *may* have
+        # queued work, plus each client's queues-dict insertion rank.
+        # ``has_waiting``/``queued_clients``/``active_clients`` scan this
+        # instead of every ever-arrived client's (mostly empty) deque —
+        # the difference between O(backlog) and O(all clients) per
+        # iteration on a 10⁴-account trace.  Stale entries (queue drained
+        # since the last look) are pruned lazily; ``_queue_rank`` orders
+        # ``queued_clients()`` exactly like the historical
+        # ``queues.items()`` iteration, which the policies' min()
+        # tie-breaks are pinned to.
+        self._backlog: set = set()
+        self._queue_rank: Dict[str, int] = {}
 
     def billable_input(self, req: Request) -> float:
         """Input tokens after the cached-prefix discount: a cache-hit
@@ -95,6 +109,7 @@ class SchedulerBase:
             # must NOT be lifted away from its earned priority
             self._on_client_return(acct)
         self.queues[acct].append(req)
+        self._note_queued(acct)
 
     def _on_new_client(self, client: str):
         pass
@@ -102,11 +117,39 @@ class SchedulerBase:
     def _on_client_return(self, client: str):
         pass
 
+    def _note_queued(self, client: str):
+        if client not in self._queue_rank:
+            self._queue_rank[client] = len(self._queue_rank)
+        self._backlog.add(client)
+
+    def requeue_head(self, req: Request):
+        """Put a popped/preempted request back at the head of its
+        account's queue.  The one sanctioned way to re-queue outside
+        ``on_arrival``: it keeps the backlog index in sync, where a
+        direct ``queues[...].appendleft`` would leave the client
+        invisible to ``has_waiting``/``queued_clients`` if its backlog
+        entry was pruned while the queue sat empty."""
+        self.queues[req.account].appendleft(req)
+        self._note_queued(req.account)
+
+    def _live_backlog(self):
+        """Backlogged clients with a nonempty queue (arbitrary order),
+        pruning entries whose queue drained since the last look."""
+        if not self._backlog:
+            return []
+        live = [c for c in self._backlog if self.queues.get(c)]
+        if len(live) != len(self._backlog):
+            self._backlog = set(live)
+        return live
+
     def has_waiting(self) -> bool:
-        return any(self.queues[c] for c in self.queues)
+        return len(self._live_backlog()) > 0
 
     def queued_clients(self):
-        return [c for c, q in self.queues.items() if q]
+        # rank order == queues-dict insertion order: the policies'
+        # min()/first-minimal tie-breaks are pinned to it
+        return sorted(self._live_backlog(),
+                      key=self._queue_rank.__getitem__)
 
     def active_clients(self):
         """Clients with queued or in-batch work — the set the VTC/Equinox
@@ -118,7 +161,7 @@ class SchedulerBase:
         the lift must see the whole cluster's active set)."""
         act = set()
         for s in getattr(self, "peers", None) or (self,):
-            act.update(c for c, q in s.queues.items() if q)
+            act.update(s._live_backlog())
         act.update(c for c, n in self.inflight.items() if n > 0)
         return act
 
@@ -156,9 +199,61 @@ class SchedulerBase:
         self.service[req.account] += inc
         req._service_charged = getattr(req, "_service_charged", 0.0) + inc
 
+    def on_tokens(self, req: Request, t_list):
+        """Bulk billing for the macro-step fast path (DESIGN.md §15):
+        bit-identical to ``for t in t_list: self.on_token(req, t, 1)``.
+
+        The contract every override must keep: the per-token increment is
+        hoisted (it does not depend on ``now``), but the accumulation
+        stays a sequential float fold — ``acc + inc`` repeated
+        ``len(t_list)`` times, NOT ``acc + inc * len(t_list)``, which
+        differs in float.  Accumulations into *different* tables
+        (service/counter/ufc) commute because they touch independent
+        float chains; the property test in
+        ``tests/test_macro_equivalence.py`` pins this for every policy."""
+        inc = req.weight * C.OUT_TOKEN_WEIGHT * 1
+        acc = self.service[req.account]
+        charged = getattr(req, "_service_charged", 0.0)
+        for _ in t_list:
+            acc += inc
+            charged += inc
+        self.service[req.account] = acc
+        req._service_charged = charged
+
+    def _dec_inflight(self, client: str):
+        # drop zero entries so the dict only ever holds active clients
+        n = self.inflight.get(client, 0) - 1
+        if n > 0:
+            self.inflight[client] = n
+        else:
+            self.inflight.pop(client, None)
+
+    def _macro_inc_key(self, req: Request):
+        """Everything this policy's per-*token* billing increment
+        depends on.  ``macro_bulk_ok`` compares it across same-account
+        batch-mates; policies whose increment reads more request state
+        must override (Equinox: the admission-time latency tilt)."""
+        return req.weight
+
+    def macro_bulk_ok(self, reqs) -> bool:
+        """May the macro bulk path (DESIGN.md §15) bill these
+        batch-mates with one ``on_tokens`` fold per request?  Charges
+        to *different* accounts always commute (independent float
+        chains).  Same-account charges commute only when the per-token
+        increments are identical — the account's accumulator then sees
+        the same count of identical additions under any interleaving,
+        so per-request folds reproduce the per-iteration order
+        bit-for-bit."""
+        seen: Dict[str, object] = {}
+        for r in reqs:
+            key = self._macro_inc_key(r)
+            if seen.setdefault(r.account, key) != key:
+                return False
+        return True
+
     def on_complete(self, req: Request, now: float, *, latency: float,
                     tps: float, util: float):
-        self.inflight[req.account] = max(self.inflight[req.account] - 1, 0)
+        self._dec_inflight(req.account)
 
     def on_preempt(self, req: Request, now: float):
         """Refund semantics (DESIGN.md §10): preemption-by-recompute
@@ -167,7 +262,7 @@ class SchedulerBase:
         and preempted service is never double-billed."""
         self.service[req.account] -= getattr(req, "_service_charged", 0.0)
         req._service_charged = 0.0
-        self.inflight[req.account] = max(self.inflight[req.account] - 1, 0)
+        self._dec_inflight(req.account)
 
     def on_requeue(self, req: Request, now: float):
         """A popped request failed admission (``canSchedule``/adaptive
@@ -222,10 +317,11 @@ class FCFS(SchedulerBase):
 
     def pop_next(self, now, exclude=None):
         best, best_c = None, None
-        for c, q in self.queues.items():
+        for c in self.queued_clients():
             if exclude and c in exclude:
                 continue
-            if q and (best is None or q[0].arrival < best.arrival):
+            q = self.queues[c]
+            if best is None or q[0].arrival < best.arrival:
                 best, best_c = q[0], c
         if best is not None:
             self.queues[best_c].popleft()
@@ -255,10 +351,11 @@ class RPM(SchedulerBase):
 
     def pop_next(self, now, exclude=None):
         best, best_c = None, None
-        for c, q in self.queues.items():
+        for c in self.queued_clients():
             if exclude and c in exclude:
                 continue
-            if q and self._allowed(c, now):
+            if self._allowed(c, now):
+                q = self.queues[c]
                 if best is None or q[0].arrival < best.arrival:
                     best, best_c = q[0], c
         if best is not None:
@@ -347,6 +444,18 @@ class VTC(SchedulerBase):
             inc = req.weight * self.w * n
             self.counter[req.account] += inc
             req._vtc_charged = getattr(req, "_vtc_charged", 0.0) + inc
+
+    def on_tokens(self, req, t_list):
+        super().on_tokens(req, t_list)
+        if self.predictor is None:
+            inc = req.weight * self.w * 1
+            acc = self.counter[req.account]
+            charged = getattr(req, "_vtc_charged", 0.0)
+            for _ in t_list:
+                acc += inc
+                charged += inc
+            self.counter[req.account] = acc
+            req._vtc_charged = charged
 
     def on_complete(self, req, now, *, latency, tps, util):
         super().on_complete(req, now, latency=latency, tps=tps, util=util)
@@ -555,6 +664,11 @@ class Equinox(SchedulerBase):
             self.ufc[req.account] += inc
             req._ufc_charged = inc
 
+    def _macro_inc_key(self, req):
+        # incremental UFC charging divides by the admission-time latency
+        # tilt, so same-account folds only commute at equal tilt
+        return (req.weight, getattr(req, "_tilt", 1.0))
+
     def on_token(self, req, now, n=1):
         super().on_token(req, now, n)
         if self.p.charging == "incremental":
@@ -562,6 +676,19 @@ class Equinox(SchedulerBase):
                    / getattr(req, "_tilt", 1.0))
             self.ufc[req.account] += inc
             req._ufc_charged = getattr(req, "_ufc_charged", 0.0) + inc
+
+    def on_tokens(self, req, t_list):
+        super().on_tokens(req, t_list)
+        if self.p.charging == "incremental":
+            inc = (req.weight * C.OUT_TOKEN_WEIGHT * 1
+                   / getattr(req, "_tilt", 1.0))
+            acc = self.ufc[req.account]
+            charged = getattr(req, "_ufc_charged", 0.0)
+            for _ in t_list:
+                acc += inc
+                charged += inc
+            self.ufc[req.account] = acc
+            req._ufc_charged = charged
 
     def on_preempt(self, req, now):
         """Refund this admission's UFC/RFC increments (tracked in

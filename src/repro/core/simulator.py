@@ -31,8 +31,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import counters as C
-from repro.core.request import (DECODING, FINISHED, PREFILLING, THROTTLED,
-                                Request)
+from repro.core.request import DECODING, FINISHED, THROTTLED, Request
 from repro.core.schedulers import SchedulerBase
 from repro.serving.batch_core import BatchConfig, BatchCore
 from repro.serving.costmodel import CostModel
@@ -47,10 +46,26 @@ class SimConfig(BatchConfig):
     # admission decisions and TTFT match the engine's paged backend
     prefix_cache: bool = False
     page_size: int = 16
+    # event-driven macro-stepping (DESIGN.md §15): when the batch is in
+    # a provably scheduling-quiet steady decode (``BatchCore.
+    # stable_horizon``), advance many iterations in one vectorized pass.
+    # Off by default — the per-iteration loop is the reference; the
+    # macro path is pinned bit-identical to it by
+    # tests/test_macro_equivalence.py.
+    macro_step: bool = False
 
 
 @dataclasses.dataclass
 class Timeline:
+    """Per-iteration samples.  ``service`` is *delta-encoded* (DESIGN.md
+    §15): each sample holds only the accounts whose accumulated service
+    changed that iteration (admitted / produced / preempted), mapped to
+    their post-iteration cumulative value.  Reconstruction is a forward
+    fill from an implicit all-zero baseline (``account_series``), so
+    memory is O(active clients) per sample instead of O(all clients) —
+    the difference between 10² and 10⁵ accounts being traceable at all.
+    Inside a bulk macro step the deltas additionally coalesce to the
+    boundary sample (intermediate samples are empty dicts)."""
     t: List[float] = dataclasses.field(default_factory=list)
     util: List[float] = dataclasses.field(default_factory=list)
     batch: List[int] = dataclasses.field(default_factory=list)
@@ -59,6 +74,32 @@ class Timeline:
     # per-iteration prefill token budget actually granted (DESIGN.md
     # §12; constant at ``prefill_chunk`` under slo_budget="static")
     budget: List[int] = dataclasses.field(default_factory=list)
+
+    def accounts(self):
+        """Sorted accounts that ever accumulated service."""
+        seen = set()
+        for d in self.service:
+            seen.update(d)
+        return sorted(seen)
+
+    def account_series(self, account: str) -> np.ndarray:
+        """Cumulative service of ``account`` at every sample (forward
+        fill of the delta encoding; 0.0 before its first charge)."""
+        out = np.empty(len(self.service))
+        cur = 0.0
+        for i, d in enumerate(self.service):
+            v = d.get(account)
+            if v is not None:
+                cur = v
+            out[i] = cur
+        return out
+
+    def final_service(self) -> Dict[str, float]:
+        """Last-known cumulative service per account (all deltas folded)."""
+        out: Dict[str, float] = {}
+        for d in self.service:
+            out.update(d)
+        return out
 
 
 @dataclasses.dataclass
@@ -84,13 +125,13 @@ class SimResult:
         return tot / max(self.sim_time, 1e-9)
 
     def service_rate_series(self, window: float = 2.0):
-        """Per-client weighted-token service rate over time."""
+        """Per-client weighted-token service rate over time (the delta-
+        encoded timeline is forward-filled per account)."""
         tl = self.timeline
         ts = np.array(tl.t)
-        clients = sorted({c for s in tl.service for c in s})
         out = {}
-        for c in clients:
-            cum = np.array([s.get(c, 0.0) for s in tl.service])
+        for c in tl.accounts():
+            cum = tl.account_series(c)
             rate = np.gradient(cum, ts, edge_order=1) if len(ts) > 2 \
                 else np.zeros_like(cum)
             out[c] = (ts, cum, rate)
@@ -100,8 +141,8 @@ class SimResult:
         """|accumulated weighted service| gap over time (both-backlogged
         windows are where fairness is defined — matches VTC's metric)."""
         tl = self.timeline
-        s1 = np.array([s.get(c1, 0.0) for s in tl.service])
-        s2 = np.array([s.get(c2, 0.0) for s in tl.service])
+        s1 = tl.account_series(c1)
+        s2 = tl.account_series(c2)
         return np.array(tl.t), np.abs(s1 - s2)
 
     def ttfts(self, client=None):
@@ -183,15 +224,10 @@ class Simulator:
 
     def _reset(self):
         self.t = 0.0
-        self.running: List[Request] = []
+        self.core.reset()               # core owns its mutable state
+        self.running = self.core.running   # alias: core owns the batch
         self.tl = Timeline()
         self.n_finished = 0
-        self.core.kv_used = 0
-        self.core.reserved.clear()
-        self.core.n_preemptions = 0
-        self.core.wasted_tokens = 0.0
-        self.core.throttled = []
-        self.core.interactions = {}
 
     @property
     def n_preemptions(self) -> int:
@@ -220,14 +256,16 @@ class Simulator:
         return self.core.kv_load()
 
     def queued_prompt_tokens(self) -> int:
-        return sum(r.prompt_len for q in self.sched.queues.values()
-                   for r in q) + sum(r.prompt_len - r.prefill_done
-                                     for r in self.running
-                                     if r.state == PREFILLING)
+        return self.core.queued_prompt_tokens()
 
     def step(self) -> bool:
         """One continuous-batching iteration on this replica's clock.
-        Returns False when idle (no running batch, nothing admissible)."""
+        Returns False when idle (no running batch, nothing admissible).
+        The iteration *body* — token production, first-token stamping,
+        completion detection, observer firing, completion feedback — is
+        ``BatchCore.execute_iteration`` (DESIGN.md §15, shared with the
+        engine); this driver supplies timing from the cost model and
+        mirrors the physical KV allocation schedule."""
         t = self.t
         # admission (Algorithm 1 inner loop, shared BatchCore)
         admitted = self.core.admit(t, len(self.running))
@@ -244,7 +282,6 @@ class Simulator:
 
         # one continuous-batching iteration
         plan = self.core.plan_prefill(self.running)
-        prefill_tokens = sum(c for _, c in plan)
         decoding = [r for r in self.running if r.state == DECODING]
         if self.core.prefix_cache is not None:
             # mirror the engine's physical allocation schedule (pages per
@@ -266,58 +303,47 @@ class Simulator:
         t += t_iter
         self.t = t
 
-        # token production
-        done_now = []
-        obs = self.observer
-        produced = [] if obs is not None else None
-        first = [] if obs is not None else None
-        for r in self.running:
-            if r.state == PREFILLING and r.prefill_done >= r.prompt_len:
-                r.state = DECODING
-                r.generated = 1              # prefill emits first token
-                if r.first_token_time is None:
-                    # kept across preempt/recompute cycles: the first
-                    # token was already streamed at its original stamp
-                    r.first_token_time = t
-                self.core.note_prefill_complete(r, t)
-                self.sched.on_token(r, t, 1)
-                if obs is not None:
-                    produced.append(r)
-                    first.append(r.rid)
-            elif r.state == DECODING:
-                r.generated += 1
-                self.sched.on_token(r, t, 1)
-                if obs is not None:
-                    produced.append(r)
-            if r.state == DECODING and r.generated >= r.output_len:
-                r.state = FINISHED
-                r.finish_time = t
-                done_now.append(r)
+        out = self.core.execute_iteration(
+            t, plan, decoding, t_iter=t_iter, fresh=fresh,
+            admitted=admitted, preempted=preempted,
+            pre_complete=self.core.release_kv)
+        self.n_finished += len(out.finished)
 
-        # completions -> feedback loop (BatchCore closes Algorithm 1)
-        iter_tokens = prefill_tokens + len(decoding)
-        util = self.core.iteration_util(t_iter, fresh, len(self.running))
-        if obs is not None:
-            # per-iteration sample BEFORE the completion feedback, so the
-            # replay oracle sees token charges and completion
-            # reconciliation in the same order the scheduler did
-            obs.on_iteration(t, t_iter=t_iter, util=util, fresh=fresh,
-                             running=self.running, produced=produced,
-                             first=first)
-        for r in done_now:
-            self.running.remove(r)
-            self.core.release_kv(r)
-            self.core.complete(r, t, util=util)
-            self.n_finished += 1
-
-        # timeline sample
+        # timeline sample (service delta-encoded; DESIGN.md §15)
         self.tl.t.append(t)
-        self.tl.util.append(util)
-        self.tl.batch.append(len(self.running) + len(done_now))
-        self.tl.tokens.append(iter_tokens)
-        self.tl.service.append(dict(self.sched.service))
+        self.tl.util.append(out.util)
+        self.tl.batch.append(len(self.running) + len(out.finished))
+        self.tl.tokens.append(out.iter_tokens)
+        self.tl.service.append(out.service_delta)
         self.tl.budget.append(self.core.last_prefill_budget)
         return True
+
+    def macro_or_step(self, stop_before: float = float("inf")) -> bool:
+        """Advance one scheduling quantum: a vectorized macro step over
+        the whole stable decode horizon when one exists (DESIGN.md §15),
+        else one legacy iteration.  ``stop_before`` is the next
+        clock-visible event (pending arrival or ``max_time``) the macro
+        step must not run past."""
+        k = self.core.stable_horizon()
+        if k >= 2:                      # a 1-iteration macro is pure overhead
+            tl = self.tl
+
+            def cb(t, util, batch, tokens, delta, budget):
+                tl.t.append(t)
+                tl.util.append(util)
+                tl.batch.append(batch)
+                tl.tokens.append(tokens)
+                tl.service.append(delta)
+                tl.budget.append(budget)
+
+            done, t_end, finished = self.core.execute_macro_step(
+                self.t, k, stop_before=stop_before, timeline_cb=cb,
+                pre_complete=self.core.release_kv)
+            if done:
+                self.t = t_end
+                self.n_finished += len(finished)
+                return True
+        return self.step()
 
     def run(self, requests: List[Request] = None, max_time: float = None,
             interactions=None) -> SimResult:
@@ -363,7 +389,11 @@ class Simulator:
                 #                       releases only happen inside step)
                 self.t = heap[0][0]   # idle jump to the next arrival
                 continue
-            self.step()
+            if self.cfg.macro_step:
+                self.macro_or_step(min(heap[0][0], max_time) if heap
+                                   else max_time)
+            else:
+                self.step()
 
         # result set: everything that entered the arrival stream, plus
         # the turns a throttled/unfinished interaction never released —

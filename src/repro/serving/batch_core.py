@@ -97,15 +97,46 @@ class BatchConfig:
                              f"got {self.slo_budget!r}")
 
 
+@dataclasses.dataclass
+class IterationOutcome:
+    """What one continuous-batching iteration produced (DESIGN.md §15) —
+    the return contract of ``BatchCore.execute_iteration``, shared by
+    the simulator and the engine so their token-production/completion
+    loops are literally one piece of code.  Every field here must be
+    documented in DESIGN.md §15 (``scripts/check_docs.py`` enforces
+    it)."""
+    produced: List[int]          # rids that emitted a token this iteration
+    firsts: List[int]            # subset of ``produced``: first tokens
+    finished: List[Request]      # requests completed this iteration
+    t_iter: float                # modeled iteration duration (s)
+    util: float                  # modeled utilization of the iteration
+    iter_tokens: int             # prefill chunk tokens + decode tokens
+    service_delta: Dict[str, float]   # post-iteration service of every
+    #                                   account whose service changed
+
+
 class BatchCore:
-    """Admission + KV accounting + completion feedback, frontend-agnostic.
+    """Admission + KV accounting + token production + completion
+    feedback, frontend-agnostic.
 
     Drivers call, per iteration:
         ``admit(now, batch_len)``         -> newly admitted requests
         ``prepare_iteration(now, run)``   -> reconcile + preempted victims
         ``plan_prefill(running)``         -> [(req, chunk), ...] prefill plan
         ``iteration_time(plan, ...)``     -> modeled iteration duration
-        ``complete(req, now, ...)``       -> close a finished request
+        ``execute_iteration(now, ...)``   -> token production, first-token
+                                             stamping, completion detection,
+                                             observer firing, completion
+                                             feedback -> IterationOutcome
+    and, on the event-driven fast path (DESIGN.md §15):
+        ``stable_horizon()``              -> k decode-only iterations that
+                                             are provably scheduling-quiet
+        ``execute_macro_step(t0, k, ..)`` -> advance k iterations at once
+
+    The core also *owns* the running batch (``self.running``) and every
+    piece of mutable per-run state (``reset()``); frontends alias the
+    list and drive it, so state like the prompt-token backlog
+    (``queued_prompt_tokens``) has exactly one implementation.
     """
 
     def __init__(self, scheduler: SchedulerBase, cost_model: CostModel,
@@ -127,21 +158,33 @@ class BatchCore:
         #   (property: also threads the locality probe into the scheduler)
         self.kv_budget = (self.cfg.kv_budget_tokens
                           or cost_model.kv_budget_tokens())
-        self.kv_used = 0
-        self.reserved: Dict[int, int] = {}
         self.kv_page = max(getattr(self.cfg, "kv_page_size", 1) or 1, 1)
+        self.admission = as_controller(admission)
+        # mutable per-run state: created once, zeroed by ``reset()`` so
+        # construction and a frontend reset can never drift apart
+        self.reserved: Dict[int, int] = {}
+        self.running: List[Request] = []
+        self.reset()
+        if observer is not None:
+            observer.bind_core(self)    # after budgets/config are final
+
+    def reset(self):
+        """Zero every piece of mutable per-run state this core owns —
+        the one construction/reset path.  ``reserved`` and ``running``
+        are cleared *in place* because frontends alias them
+        (``ServingEngine.reserved``, both frontends' ``running``)."""
+        self.kv_used = 0
+        self.reserved.clear()
+        self.running.clear()
         self.n_preemptions = 0          # preemption events on this replica
         self.blocked_client = None      # set by try_admit on canSchedule fail
         self.last_prefill_budget = None  # solved budget of the last
         #                                  plan_prefill (DESIGN.md §12)
         # interactions + overload-aware admission (DESIGN.md §13) -----------
-        self.admission = as_controller(admission)
         self.interactions: Dict[int, object] = {}   # id -> Interaction
         self.on_turn_release = None     # driver hook: next turn -> arrivals
         self.throttled: List[Request] = []
         self.wasted_tokens = 0.0        # recompute waste from preemptions
-        if observer is not None:
-            observer.bind_core(self)    # after budgets/config are final
 
     # -- locality probe threading (DESIGN.md §11) ----------------------------
     @property
@@ -210,7 +253,7 @@ class BatchCore:
         return self.kv_used / max(self.kv_budget, 1)
 
     def _requeue(self, req: Request, now: float):
-        self.sched.queues[req.account].appendleft(req)
+        self.sched.requeue_head(req)
         self.sched.on_requeue(req, now)
         if self.observer is not None:
             self.observer.on_requeue(req, now)
@@ -223,11 +266,19 @@ class BatchCore:
         self.interactions[inter.interaction_id] = inter
 
     def queued_prompt_tokens(self) -> int:
-        """Prompt-token backlog sitting in the scheduler queues — the
-        second overload signal (a saturated KV can drain; a deep prefill
-        backlog means arrivals outpace completions)."""
-        return sum(r.prompt_len for q in self.sched.queues.values()
-                   for r in q)
+        """Prompt-token backlog — the second overload signal (a saturated
+        KV can drain; a deep prefill backlog means arrivals outpace
+        completions).  One implementation for both consumers: the
+        admission controller's ``overloaded()`` check and the replica
+        routing protocol (``Cluster``'s least-kv / min-ttft scores) read
+        the same number — scheduler queues plus the un-prefilled
+        remainder of already-admitted PREFILLING requests, which is
+        backlog the batch still has to chew through."""
+        return sum(r.prompt_len
+                   for c in self.sched._live_backlog()
+                   for r in self.sched.queues[c]) \
+            + sum(r.prompt_len - r.prefill_done for r in self.running
+                  if r.state == PREFILLING)
 
     def overloaded(self) -> bool:
         """Is this replica under enough pressure that the admission
@@ -378,7 +429,7 @@ class BatchCore:
         req.cached_prefix = 0
         self.n_preemptions += 1
         self.sched.on_preempt(req, now)
-        self.sched.queues[req.account].appendleft(req)
+        self.sched.requeue_head(req)
         if self.observer is not None:
             self.observer.on_preempt(req, now)
         return req
@@ -591,6 +642,319 @@ class BatchCore:
         overhead = self.refresh_overhead(fresh_batch)
         return (1.0 - overhead / max(t_iter, 1e-9)) * min(
             n_running / max(self.cfg.max_batch * 0.25, 1), 1.0)
+
+    # -- token production (the one iteration body; DESIGN.md §15) ------------
+    def execute_iteration(self, now: float, plan, decoding, *,
+                          t_iter: float, fresh: bool, firsts=None,
+                          admitted=(), preempted=(),
+                          on_first=None, on_decode=None,
+                          pre_complete=None, post_complete=None
+                          ) -> IterationOutcome:
+        """The shared iteration body both frontends used to duplicate:
+        token production (prefill-completion first tokens + one decode
+        token per DECODING request), first-token stamping, completion
+        detection, observer firing and the completion feedback loop.
+
+        The driver has already advanced its clock to ``now`` (timing is
+        driver-owned: cost model vs wall clock) and supplies:
+
+        - ``plan``      — this iteration's ``plan_prefill`` output;
+        - ``decoding``  — requests that were DECODING at iteration start;
+        - ``firsts``    — production schedule.  None (simulator): scan
+          ``self.running`` in order, interleaving first tokens with
+          decode tokens exactly like the historical sim loop.  A list
+          (engine): emit these first tokens first, then the decode
+          tokens — the historical engine order;
+        - ``on_first(req)`` / ``on_decode(req)`` — physical-KV hooks run
+          before the request's bookkeeping (engine: install the prefilled
+          cache / sample the next token);
+        - ``pre_complete(req)`` / ``post_complete(req)`` — around
+          ``complete`` for each finished request (sim: ``release_kv``;
+          engine: free pool pages + vacate the slot).
+
+        Mutates request lifecycle state and ``self.running`` (finished
+        requests are removed); fires ``scheduler.on_token`` per produced
+        token and ``observer.on_iteration`` *before* completions, so the
+        replay oracle sees hook calls in the scheduler's order."""
+        running = self.running
+        sched = self.sched
+        produced_reqs: List[Request] = []
+        first_rids: List[int] = []
+        done_now: List[Request] = []
+
+        def emit_first(r: Request):
+            if on_first is not None:
+                on_first(r)
+            r.state = DECODING
+            r.generated = 1              # prefill emits the first token
+            if r.first_token_time is None:
+                # kept across preempt/recompute cycles: the first token
+                # was already streamed at its original stamp
+                r.first_token_time = now
+            self.note_prefill_complete(r, now)
+            sched.on_token(r, now, 1)
+            produced_reqs.append(r)
+            first_rids.append(r.rid)
+            if r.generated >= r.output_len:
+                r.state = FINISHED
+                r.finish_time = now
+                done_now.append(r)
+
+        def emit_decode(r: Request):
+            if on_decode is not None:
+                on_decode(r)
+            r.generated += 1
+            sched.on_token(r, now, 1)
+            produced_reqs.append(r)
+            if r.generated >= r.output_len:
+                r.state = FINISHED
+                r.finish_time = now
+                done_now.append(r)
+
+        if firsts is None:
+            # simulator order: one pass over the running batch, each
+            # request produced where it sits
+            for r in running:
+                if r.state == PREFILLING and r.prefill_done >= r.prompt_len:
+                    emit_first(r)
+                elif r.state == DECODING:
+                    emit_decode(r)
+        else:
+            # engine order: completed prefills first, then the decode
+            # batch that was captured at iteration start
+            for r in firsts:
+                emit_first(r)
+            for r in decoding:
+                emit_decode(r)
+
+        iter_tokens = sum(c for _, c in plan) + len(decoding)
+        util = self.iteration_util(t_iter, fresh, len(running))
+        if self.observer is not None:
+            # per-iteration sample BEFORE the completion feedback, so the
+            # replay oracle sees token charges and completion
+            # reconciliation in the same order the scheduler did
+            self.observer.on_iteration(now, t_iter=t_iter, util=util,
+                                       fresh=fresh, running=running,
+                                       produced=produced_reqs,
+                                       first=first_rids)
+        for r in done_now:
+            running.remove(r)
+            if pre_complete is not None:
+                pre_complete(r)
+            self.complete(r, now, util=util)
+            if post_complete is not None:
+                post_complete(r)
+        accts = {r.account for r in produced_reqs}
+        accts.update(r.account for r in admitted)
+        accts.update(r.account for r in preempted)
+        delta = {a: sched.service[a] for a in sorted(accts)}
+        return IterationOutcome(produced=[r.rid for r in produced_reqs],
+                                firsts=first_rids, finished=done_now,
+                                t_iter=t_iter, util=util,
+                                iter_tokens=iter_tokens,
+                                service_delta=delta)
+
+    # -- event-driven macro-stepping (DESIGN.md §15) -------------------------
+    def stable_horizon(self) -> int:
+        """Number of upcoming iterations that are provably *scheduling-
+        quiet*: pure batched decode where no admission, preemption,
+        prefill-budget or completion decision can change anything — so
+        they may be advanced in one vectorized pass.  Exhaustive
+        conditions (each one's violation is an event that ends a macro
+        step; DESIGN.md §15):
+
+        1. the batch is non-empty and every running request is DECODING
+           (a PREFILLING request changes the chunk plan every iteration);
+        2. no request is queued on any account (a queued head re-attempts
+           admission — and fires requeue telemetry — every iteration);
+        3. k stops at the earliest completion: ``min(output_len -
+           generated)`` (completions feed the scheduler/predictor and can
+           unblock admission);
+        4. k stops before reservation growth would exceed the KV
+           headroom, i.e. before ``prepare_iteration`` would preempt
+           (closed-form page-rounded growth, ``_kv_stable_iters``);
+        5. the *driver* additionally stops before the next pending
+           arrival / turn release / ``max_time`` (clock-dependent — the
+           core cannot see the arrival heap), via ``stop_before``.
+
+        Returns 0 when no quiet horizon exists (drivers fall back to the
+        per-iteration path)."""
+        running = self.running
+        if not running or self.sched.has_waiting():
+            return 0
+        for r in running:
+            if r.state != DECODING:
+                return 0
+        k = min(r.output_len - r.generated for r in running)
+        if k <= 0:
+            return 0
+        return self._kv_stable_iters(running, k)
+
+    def _kv_stable_iters(self, running, k: int) -> int:
+        """Largest m <= k such that growing every reservation through
+        iteration m-1 stays within the KV headroom (page-rounded, exact
+        integer arithmetic — identical to m successive ``reconcile``
+        passes).  Headroom is constant over a decode-only horizon: the
+        pinned-page deduction only moves on admission / prefill
+        completion / release, none of which occur inside a macro step."""
+        headroom = self.kv_headroom()
+
+        def used_at(i: int) -> int:
+            u = self.kv_used
+            for r in running:
+                need = self._round_kv(self.footprint(r) + i)
+                held = self.reserved.get(r.rid, 0)
+                if need > held:
+                    u += need - held
+            return u
+
+        if used_at(k - 1) <= headroom:
+            return k
+        if used_at(0) > headroom:
+            return 0
+        lo, hi = 0, k - 1          # used_at(lo) fits; used_at(hi) does not
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if used_at(mid) <= headroom:
+                lo = mid
+            else:
+                hi = mid
+        return lo + 1
+
+    def execute_macro_step(self, t0: float, k: int, *,
+                           stop_before: float = float("inf"),
+                           timeline_cb=None, pre_complete=None,
+                           post_complete=None):
+        """Advance up to ``k`` steady-decode iterations (a
+        ``stable_horizon`` prefix) in one pass.  Returns
+        ``(n_done, t_end, finished)``.
+
+        Per-iteration step times come from ``CostModel.
+        decode_macro_times`` in closed form (bit-identical to the
+        sequential cost-model calls — integer-exactness argument in its
+        docstring); the clock itself stays a sequential float fold, so
+        every timestamp matches the per-iteration loop exactly.
+        Iteration i executes only while its *start* time is before
+        ``stop_before`` (the legacy loop's arrival/horizon rule).
+
+        Two inner paths, both bit-identical in every scheduler table,
+        request timestamp and KV count:
+
+        - **bulk** (no observer, no prefix cache, and the scheduler's
+          ``macro_bulk_ok`` holds — same-account batch-mates share an
+          identical per-token increment, so per-request folds commute
+          with the per-iteration order): billing via
+          ``SchedulerBase.on_tokens`` (the proven sequential-fold
+          equivalent), reservation growth in closed form.  Timeline
+          service deltas coalesce to the macro boundary (empty dicts in
+          between — DESIGN.md §15).
+        - **interleaved** (otherwise): per-iteration ``on_token`` /
+          ``reconcile`` / pool ``ensure`` / observer firing in exactly
+          the legacy order, so flight-recorder traces, snapshots and
+          ``replay_counters`` pin bit-identical; still skips admission,
+          victim selection, prefill planning and per-iteration cost-model
+          sums."""
+        running = self.running
+        sched = self.sched
+        obs = self.observer
+        cache = self.prefix_cache
+        n = len(running)
+        times = self.cm.decode_macro_times(
+            [r.prompt_len + r.generated for r in running], k)
+        # with no PREFILLING request the planner grants the full cap and
+        # plans no chunks, under both slo_budget modes
+        budget = self.cfg.prefill_chunk if self.cfg.stall_free else 1 << 30
+        bulk = (obs is None and cache is None
+                and sched.macro_bulk_ok(running))
+        t = t0
+        done = 0
+        if bulk:
+            t_stamps: List[float] = []
+            samples: List[tuple] = []
+            for i in range(k):
+                if t >= stop_before:
+                    break
+                t_iter = max(float(times[i]), 1e-6)
+                t = t + t_iter
+                t_stamps.append(t)
+                done += 1
+                if timeline_cb is not None:
+                    samples.append((t, self.iteration_util(t_iter, False, n),
+                                    t_iter))
+            if not done:
+                return 0, t0, []
+            self.last_prefill_budget = budget
+            for r in running:
+                # closed-form reservation growth == `done` reconciles
+                need = self._round_kv(self.footprint(r) + done - 1)
+                held = self.reserved.get(r.rid, 0)
+                if need > held:
+                    self.kv_used += need - held
+                    self.reserved[r.rid] = need
+                sched.on_tokens(r, t_stamps)
+                r.generated += done
+            if timeline_cb is not None:
+                final = {r.account: sched.service[r.account]
+                         for r in sorted(running, key=lambda r: r.account)}
+                for i, (ti, util, _t_iter) in enumerate(samples):
+                    timeline_cb(ti, util, n, n,
+                                final if i == done - 1 else {}, budget)
+            util_last = self.iteration_util(max(float(times[done - 1]),
+                                                1e-6), False, n)
+        else:
+            util_last = 0.0
+            for i in range(k):
+                if t >= stop_before:
+                    break
+                # prepare_iteration, minus victim selection: the horizon
+                # proved no preemption can trigger
+                for r in running:
+                    self.reconcile(r)
+                self.last_prefill_budget = budget
+                if obs is not None:
+                    obs.on_prefill_budget(budget)
+                if cache is not None:
+                    pool = cache.pool
+                    for r in running:
+                        # mirror the physical allocation schedule: one
+                        # decode row per request per iteration (legacy
+                        # order — eviction timing must match)
+                        pool.ensure(r.rid, r.prompt_len + r.generated)
+                t_iter = max(float(times[i]), 1e-6)
+                t = t + t_iter
+                done += 1
+                done_now: List[Request] = []
+                for r in running:
+                    r.generated += 1
+                    sched.on_token(r, t, 1)
+                    if r.generated >= r.output_len:
+                        r.state = FINISHED
+                        r.finish_time = t
+                        done_now.append(r)
+                util_last = self.iteration_util(t_iter, False, n)
+                if obs is not None:
+                    obs.on_iteration(t, t_iter=t_iter, util=util_last,
+                                     fresh=False, running=running,
+                                     produced=list(running), first=[])
+                if timeline_cb is not None:
+                    delta = {a: sched.service[a] for a in
+                             sorted({r.account for r in running})}
+                    timeline_cb(t, util_last, len(running), n, delta,
+                                budget)
+                if done_now:
+                    break               # horizon guarantees this is i==k-1
+        finished = [r for r in running if r.generated >= r.output_len]
+        for r in finished:
+            r.state = FINISHED
+            if r.finish_time is None:
+                r.finish_time = t
+            running.remove(r)
+            if pre_complete is not None:
+                pre_complete(r)
+            self.complete(r, t, util=util_last)
+            if post_complete is not None:
+                post_complete(r)
+        return done, t, finished
 
     # -- completion feedback -------------------------------------------------
     def complete(self, req: Request, now: float, util: float = None):

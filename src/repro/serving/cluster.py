@@ -398,12 +398,48 @@ class Cluster:
                 core.interactions = registry
                 core.on_turn_release = lambda nxt, now: push(nxt)
 
-        # completion is judged on THIS run's requests (leftovers from an
-        # earlier max_time-cut run may still finish; they don't count);
-        # throttled requests never finish — they are closed, not open
-        while heap or any(r.state not in (FINISHED, THROTTLED)
-                          for r in all_reqs):
-            busy = [rep for rep in self.replicas if rep.has_work()]
+        # Global event heap (DESIGN.md §15): one live (clock, index)
+        # entry per *busy* replica.  A replica's clock only moves when it
+        # steps (or takes the no-progress tick), and both happen while
+        # its entry is popped, so entries are never stale — no lazy
+        # deletion.  Keying by (clock, index) reproduces the legacy
+        # "first replica with the minimum clock" tie-break exactly (list
+        # order == index order), so the lockstep `min()` scan and the
+        # O(all-requests) termination scan are gone: idle replicas cost
+        # nothing per event, and an open request always keeps its
+        # replica busy, so `heap or busy` is the termination condition.
+        # (One semantic refinement over the old scan: work left over in
+        # a reused cluster from an earlier max_time-cut run now drains
+        # too instead of being abandoned mid-flight; it still does not
+        # appear in this run's result set.)
+        busy: List[tuple] = []            # (clock, replica index)
+        in_heap = [False] * len(self.replicas)
+
+        def repush(i):
+            if self.replicas[i].has_work():
+                in_heap[i] = True
+                heapq.heappush(busy, (self.replicas[i].clock, i))
+            else:
+                in_heap[i] = False
+
+        def advance_idle(t_now):
+            # idle replicas keep pace with the frontier so routing reads
+            # (min_ttft's replica clock) see "now", exactly as the
+            # lockstep loop kept them advanced — done lazily, only when
+            # a dispatch is about to read them
+            for i, rep in enumerate(self.replicas):
+                if not in_heap[i]:
+                    rep.advance_to(t_now)
+
+        def route(req):
+            idx = self.dispatch(req)
+            if not in_heap[idx]:
+                repush(idx)
+
+        for i in range(len(self.replicas)):
+            repush(i)
+
+        while True:
             if not busy:
                 # whole cluster idle: jump to the next arrival
                 if not heap:
@@ -411,29 +447,40 @@ class Cluster:
                 t_now = heap[0][0]
                 if t_now >= max_time:
                     break
-                for rep in self.replicas:
-                    rep.advance_to(t_now)
-                self.dispatch(heapq.heappop(heap)[2])
+                advance_idle(t_now)
+                route(heapq.heappop(heap)[2])
                 continue
-            # event frontier = slowest busy replica; idle replicas keep
-            # pace (they would accept work instantly at "now")
-            t_now = min(rep.clock for rep in busy)
+            # event frontier = slowest busy replica
+            t_now = busy[0][0]
             if t_now >= max_time:
                 break
-            for rep in self.replicas:
-                if not rep.has_work():
-                    rep.advance_to(t_now)
-            # route every arrival the frontier has reached
-            while heap and heap[0][0] <= t_now:
-                self.dispatch(heapq.heappop(heap)[2])
-            rep = min((r for r in self.replicas if r.has_work()),
-                      key=lambda r: r.clock)
+            if heap and heap[0][0] <= t_now:
+                advance_idle(t_now)
+                # route every arrival the frontier has reached
+                while heap and heap[0][0] <= t_now:
+                    route(heapq.heappop(heap)[2])
+            _, i = heapq.heappop(busy)
+            rep = self.replicas[i]
             before = rep.clock
-            rep.step()
+            if (getattr(getattr(rep, "cfg", None), "macro_step", False)
+                    and hasattr(rep, "macro_or_step")):
+                # macro burst window: stop strictly before the next
+                # arrival, the next busy peer's clock (shared fairness
+                # counters must be charged in the legacy replica
+                # interleaving), and the horizon cut
+                stop = max_time
+                if heap:
+                    stop = min(stop, heap[0][0])
+                if busy:
+                    stop = min(stop, busy[0][0])
+                rep.macro_or_step(stop)
+            else:
+                rep.step()
             if rep.clock <= before:
                 # no progress (e.g. RPM quota starvation on the engine):
                 # model a host polling tick so the event loop advances
                 rep.advance_to(before + rep.cm.hw.batch_overhead)
+            repush(i)
 
         # surface the denied work: turns a throttled (or horizon-cut)
         # interaction never released still belong to this run's metrics

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_MLA, MAMBA2, RGLRU,
                                 ModelConfig)
 
@@ -100,6 +102,15 @@ class CostModel:
         hd = cfg.resolved_head_dim()
         self.attn_flops_per_ctx = 4 * cfg.n_heads * hd * sum(
             1 for k in cfg.layer_kinds() if k in (ATTN, ATTN_LOCAL, ATTN_MLA))
+        # Cached KV layout (pure function of cfg) so the macro-step fast
+        # path does not rebuild the per-layer list on every call.
+        self._kv_per_layer, self._kv_fixed = kv_bytes_per_token(cfg)
+        # With no sliding windows the per-layer fold collapses to one
+        # multiply; all quantities are ints, so the collapsed form is
+        # exactly the sequential sum (integer arithmetic, < 2^53).
+        self._kv_simple = (sum(pt for pt, _ in self._kv_per_layer)
+                           if all(w == 0 for _, w in self._kv_per_layer)
+                           else None)
 
     @classmethod
     def for_serving(cls, cfg: ModelConfig, min_kv_tokens: int = 50_000,
@@ -112,6 +123,20 @@ class CostModel:
             / (1 - 0.35) / hw.hbm_bytes
         chips = max(1, int(-(-need // 1)))
         return cls(cfg, dataclasses.replace(hw, chips=chips))
+
+    def _kv_read(self, ctx_len: int) -> float:
+        """``kv_read_bytes(self.cfg, ctx_len)`` off the cached layout —
+        bit-identical (integer arithmetic throughout), without
+        rebuilding the per-layer list per call.  The hot multiplicand
+        of every decode-step price: the per-iteration loop evaluates it
+        once per running request."""
+        if self._kv_simple is not None:
+            return float(self._kv_fixed + self._kv_simple * ctx_len)
+        total = self._kv_fixed
+        for per_tok, window in self._kv_per_layer:
+            eff_ctx = min(ctx_len, window) if window else ctx_len
+            total += per_tok * eff_ctx
+        return float(total)
 
     # -- phases ---------------------------------------------------------------
     def prefill_time(self, n_tokens: int, avg_ctx: float = 0.0) -> float:
@@ -130,7 +155,7 @@ class CostModel:
         if b == 0:
             return 0.0
         bytes_moved = self.param_bytes + sum(
-            kv_read_bytes(self.cfg, c) for c in ctx_lens)
+            self._kv_read(c) for c in ctx_lens)
         flops = b * self.flops_per_token + self.attn_flops_per_ctx \
             * sum(min(c, 10 ** 9) for c in ctx_lens)
         t_mem = bytes_moved / (self.hw.chips * self.hw.hbm_bw * self.hw.bw_eff)
@@ -167,13 +192,61 @@ class CostModel:
         dec_flops = b * self.flops_per_token + self.attn_flops_per_ctx \
             * sum(min(c, 10 ** 9) for c in ctx_lens)
         bytes_moved = self.param_bytes + sum(
-            kv_read_bytes(self.cfg, c) for c in ctx_lens)
+            self._kv_read(c) for c in ctx_lens)
         t_comp = (pf_flops / (self.hw.chips * self.hw.peak_flops
                               * self.hw.prefill_eff)
                   + dec_flops / (self.hw.chips * self.hw.peak_flops))
         t_mem = bytes_moved / (self.hw.chips * self.hw.hbm_bw
                                * self.hw.bw_eff)
         return max(t_comp, t_mem)
+
+    def decode_macro_times(self, ctx_lens, k: int):
+        """Step times for ``k`` consecutive pure-decode iterations, where
+        every context grows by one token per iteration.
+
+        Bit-identical to the sequential loop
+
+            [self.mixed_step_time([], [c + i for c in ctx_lens])
+             for i in range(k)]
+
+        because every byte/FLOP quantity involved (``param_bytes``, per-
+        token KV bytes, context lengths, decode FLOPs) is an integer far
+        below 2**53 — so the float64 sums here are *exact* integers, and
+        regrouping the per-request/per-layer summation cannot change
+        them.  The only inexact operations are the final two divisions
+        and the max, which this method performs with the same operand
+        order as ``mixed_step_time`` (DESIGN.md §15).  Returns a float64
+        array of length ``k``; the caller adds batch-refresh overhead
+        (``BatchCore.iteration_time`` semantics) per iteration."""
+        k = int(k)
+        b = len(ctx_lens)
+        if k <= 0:
+            return np.zeros(0)
+        if b == 0:
+            return np.zeros(k)
+        ctx0 = np.asarray(ctx_lens, dtype=np.float64)
+        steps = np.arange(k, dtype=np.float64)
+        # (k, b) matrix of context lengths: row i is iteration i.
+        ctx = ctx0[None, :] + steps[:, None]
+        # Decode FLOPs: b*flops_per_token + attn_flops_per_ctx*sum(min(c,1e9))
+        dec_flops = (b * float(self.flops_per_token)
+                     + float(self.attn_flops_per_ctx)
+                     * np.minimum(ctx, 1e9).sum(axis=1))
+        # Bytes moved: weights + fixed recurrent state + per-layer KV
+        # reads (sliding windows clamp the effective context).
+        bytes_moved = np.full(
+            k, float(self.param_bytes) + float(self._kv_fixed) * b)
+        groups: dict = {}
+        for per_tok, window in self._kv_per_layer:
+            if per_tok:
+                groups[window] = groups.get(window, 0) + per_tok
+        for window, per_tok in groups.items():
+            eff = np.minimum(ctx, window) if window else ctx
+            bytes_moved += float(per_tok) * eff.sum(axis=1)
+        t_comp = dec_flops / (self.hw.chips * self.hw.peak_flops)
+        t_mem = bytes_moved / (self.hw.chips * self.hw.hbm_bw
+                               * self.hw.bw_eff)
+        return np.maximum(t_comp, t_mem)
 
     # -- derived metrics -------------------------------------------------------
     def mfu(self, useful_tokens: float, elapsed: float) -> float:

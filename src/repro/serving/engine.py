@@ -48,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, ModelConfig
-from repro.core.request import DECODING, PREFILLING, Request
+from repro.core.request import DECODING, Request
 from repro.core.schedulers import SchedulerBase
 from repro.kernels import paged_attention
 from repro.models import (decode_step, init_cache, init_params, prefill,
@@ -142,7 +142,8 @@ class ServingEngine:
             from repro.serving.prefix_cache import PrefixCache
             self.core.prefix_cache = PrefixCache(self.pool)
         self.slots: List[Optional[Request]] = [None] * max_slots
-        self.running: List[Request] = []    # admission order (= sim order)
+        self.running = self.core.running    # alias: core owns the batch
+        #                                     (admission order = sim order)
         self.reserved = self.core.reserved  # alias: core owns KV accounting
         self.t_model = 0.0            # modeled target-hardware clock
         self.t_wall0 = time.monotonic()
@@ -180,10 +181,7 @@ class ServingEngine:
         return self.core.kv_load()
 
     def queued_prompt_tokens(self) -> int:
-        return sum(r.prompt_len for q in self.sched.queues.values()
-                   for r in q) + sum(r.prompt_len - r.prefill_done
-                                     for r in self.running
-                                     if r.state == PREFILLING)
+        return self.core.queued_prompt_tokens()
 
     def _free_slot(self) -> int:
         for i, s in enumerate(self.slots):
@@ -459,56 +457,37 @@ class ServingEngine:
         t_iter = self.core.iteration_time(plan, ctxs, fresh)
         self.t_model += t_iter
         now = self.now()
-        util = self.core.iteration_util(t_iter, fresh, len(self.running))
 
-        # 5. lifecycle.  First-token time is stamped here, *after* the
-        #    clock advanced over the iteration that completed the prompt —
+        # 5. lifecycle — the shared iteration body (DESIGN.md §15).
+        #    First-token time is stamped inside, *after* the clock
+        #    advanced over the iteration that completed the prompt —
         #    stamping at admission under-reported TTFT by the entire
-        #    prefill iteration.
-        done_now = []
-        obs = self.core.observer
-        produced = [] if obs is not None else None
-        first = [] if obs is not None else None
-        for req, row in done_prefill:
-            self._install_prefill(req, row)
-            req.state = DECODING
-            req.generated = 1              # prefill emits first token
-            if req.first_token_time is None:
-                # kept across preempt/recompute cycles: the first token
-                # was already streamed at its original stamp
-                req.first_token_time = now
-            self.core.note_prefill_complete(req, now)
-            self.sched.on_token(req, now, 1)
-            if obs is not None:
-                produced.append(req)
-                first.append(req.rid)
-            if req.generated >= req.output_len:
-                done_now.append(req)
-        for req in decoding:
+        #    prefill iteration.  The engine supplies the physical-KV
+        #    hooks: install the prefilled cache when a first token is
+        #    emitted, sample the next token per decode, and free pool
+        #    pages + the slot when a request completes.
+        n_running = len(self.running)
+        first_rows = {req.rid: row for req, row in done_prefill}
+
+        def on_first(req):
+            self._install_prefill(req, first_rows[req.rid])
+
+        def on_decode(req):
             req._next_token = self._sample(rows[req.rid])
             req._pos += 1
-            req.generated += 1
-            self.sched.on_token(req, now, 1)
-            if obs is not None:
-                produced.append(req)
-            if req.generated >= req.output_len:   # synthetic EOS
-                done_now.append(req)
-        if obs is not None:
-            # sample before the completion feedback (mirrors Simulator.
-            # step) so replay sees hook calls in the scheduler's order
-            obs.on_iteration(now, t_iter=t_iter, util=util, fresh=fresh,
-                             running=self.running, produced=produced,
-                             first=first)
 
-        # completions -> feedback loop (BatchCore closes Algorithm 1)
-        n_running = len(self.running)
-        for req in done_now:
-            self.core.complete(req, now, util=util)
+        def post_complete(req):
             self.finished.append(req)
             if self.backend == "paged":
                 self.pool.free_request(req.rid)
             self.slots[req._slot] = None
-            self.running.remove(req)
+
+        self.core.execute_iteration(
+            now, plan, decoding, t_iter=t_iter, fresh=fresh,
+            firsts=[req for req, _ in done_prefill],
+            admitted=admitted, preempted=preempted,
+            on_first=on_first, on_decode=on_decode,
+            post_complete=post_complete)
         self.iterations += 1
         return n_running
 

@@ -751,7 +751,7 @@ def replay_counters(trace: dict) -> Dict[str, Dict[str, float]]:
             sched.on_preempt(r, t)
             r.generated = 0
             r.cached_prefix = 0
-            sched.queues[r.account].appendleft(r)
+            sched.requeue_head(r)
         elif et == "requeue":
             sched.on_requeue(stubs[ev["rid"]], t)
         elif et == "complete":

@@ -86,6 +86,52 @@ def dynamic(duration=60.0, seed=0):
     return sorted(r1 + r2a + r2b, key=lambda r: r.arrival)
 
 
+def zipf_scale(n_clients=10_000, n_requests=200_000, duration=4000.0,
+               seed=0, alpha=1.05, burst=24, prompt_rng=(16, 64),
+               out_rng=(48, 160)):
+    """Provider-scale trace (DESIGN.md §15): ``n_requests`` short chat
+    requests from ``n_clients`` accounts whose popularity follows a
+    bounded Zipf law (rank-r client weight ∝ r^-alpha — the long tail a
+    real multi-tenant endpoint sees), arriving in bursts of ``burst``
+    *distinct* clients so the batch repeatedly settles into the steady
+    all-decode state the macro-stepper exploits.
+
+    Built entirely with vectorized numpy draws — constructing the
+    ``Request`` objects is the only Python-rate loop — so generating a
+    10⁴-client / 2·10⁵-request trace costs seconds, not minutes.
+    Deterministic for a given seed (``benchmarks/sim_scale.py`` relies
+    on this for the run-twice determinism pin)."""
+    rng = np.random.default_rng(seed)
+    n_bursts = -(-n_requests // burst)          # ceil
+    burst_t = np.sort(rng.uniform(0.0, duration, size=n_bursts))
+    # bounded Zipf over client ranks; per-burst weighted sampling
+    # *without replacement* by the exponential-race (Gumbel top-k)
+    # trick, vectorized across a chunk of bursts at a time
+    w = np.arange(1, n_clients + 1, dtype=np.float64) ** -alpha
+    prompts = rng.integers(prompt_rng[0], prompt_rng[1] + 1,
+                           size=n_requests)
+    outs = rng.integers(out_rng[0], out_rng[1] + 1, size=n_requests)
+    jitter = rng.uniform(0.0, 1e-3, size=n_requests)
+    clients = np.empty((n_bursts, burst), dtype=np.int64)
+    chunk = max(1, (1 << 22) // n_clients)      # ~32 MB of keys at once
+    for c0 in range(0, n_bursts, chunk):
+        c1 = min(c0 + chunk, n_bursts)
+        keys = rng.exponential(size=(c1 - c0, n_clients)) / w
+        clients[c0:c1] = np.argpartition(keys, burst, axis=1)[:, :burst]
+    reqs = []
+    for b in range(n_bursts):
+        lo = b * burst
+        hi = min(lo + burst, n_requests)
+        t0 = burst_t[b]
+        for j, rid in enumerate(range(lo, hi)):
+            reqs.append(Request(
+                rid=rid, client=f"acct{clients[b, j]:05d}",
+                arrival=float(t0 + jitter[rid]),
+                prompt_len=int(prompts[rid]), output_len=int(outs[rid]),
+                keywords=("chat",)))
+    return sorted(reqs, key=lambda r: (r.arrival, r.rid))
+
+
 SCENARIOS = {"balanced": balanced, "stochastic": stochastic,
              "overload": overload, "dynamic": dynamic}
 

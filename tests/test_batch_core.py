@@ -211,6 +211,60 @@ def test_stallfree_parity_admission_chunks_ttft(cm):
         assert e_lat[rid] == pytest.approx(s_lat[rid], abs=1e-9)
 
 
+def test_reset_owns_all_mutable_state(cm):
+    """``BatchCore.reset()`` is the single place mutable serving state
+    is (re)initialized; both frontends call it instead of hand-zeroing
+    their own copies.  The running-batch list must be cleared *in
+    place*: the frontends alias it."""
+    sim = Simulator(cm, make_scheduler("vtc"), SimConfig(max_batch=8))
+    first = sim.run(mk_reqs(n=10))
+    assert sim.running is sim.core.running
+    batch_list = sim.core.running
+    sim.core.kv_used = 7
+    sim.core.running.append(first.requests[0])
+    sim.core.reset()
+    assert sim.core.running is batch_list and not batch_list
+    assert sim.core.kv_used == 0 and not sim.core.reserved
+    assert sim.core.n_preemptions == 0 and sim.core.wasted_tokens == 0.0
+    assert not sim.core.throttled and not sim.core.interactions
+    assert sim.core.blocked_client is None
+    assert sim.core.last_prefill_budget is None
+    # a reused Simulator replays a trace identically to a fresh one —
+    # no state leaks across runs
+    second = sim.run(mk_reqs(n=10))
+    assert {r.rid: (r.first_token_time, r.finish_time)
+            for r in first.requests} \
+        == {r.rid: (r.first_token_time, r.finish_time)
+            for r in second.requests}
+
+
+def test_queued_prompt_tokens_single_implementation(cm):
+    """Both frontends delegate the overload/routing backlog signal to
+    ``BatchCore.queued_prompt_tokens`` (it used to be duplicated and
+    could drift): queued whole prompts plus the unprefilled remainder
+    of the running batch."""
+    core = BatchCore(make_scheduler("fcfs"), cm,
+                     BatchConfig(max_batch=8, prefill_chunk=64))
+    for i in range(3):
+        core.sched.on_arrival(Request(rid=i, client="c", arrival=0.0,
+                                      prompt_len=100, output_len=4), 0.0)
+    assert core.queued_prompt_tokens() == 300
+    admitted = core.admit(0.0, 0)            # all three fit the batch
+    core.running.extend(admitted)
+    core.plan_prefill(core.running)          # one 64-token chunk lands
+    remainder = sum(r.prompt_len - r.prefill_done for r in core.running)
+    assert remainder == 236                  # 36 + 100 + 100
+    assert core.queued_prompt_tokens() == remainder
+
+    sim = Simulator(cm, make_scheduler("fcfs"))
+    cfg = SMOKE_FACTORIES["llama2-7b"]()
+    eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=2,
+                        max_len=64, cost_model=cm)
+    for front in (sim, eng):
+        assert front.queued_prompt_tokens() \
+            == front.core.queued_prompt_tokens()
+
+
 def test_engine_and_simulator_share_core_class(cm):
     cfg = SMOKE_FACTORIES["llama2-7b"]()
     eng = ServingEngine(cfg, make_scheduler("fcfs"), max_slots=2,

@@ -244,3 +244,25 @@ def test_d2lpm_deficits_are_cluster_global(cm):
                     output_len=4, keywords=("chat",)) for i in range(4)]
     cl.run(reqs, max_time=1e9)
     assert s0.counter["c"] == s1.counter["c"] > 0
+
+
+def test_cluster_waste_equals_sum_of_replica_waste(cm):
+    """Accounting cross-check (DESIGN.md §13): the cluster's
+    ``wasted_tokens`` must equal the preemption waste summed over every
+    replica core plus the computed-but-undelivered tokens of requests
+    the horizon cut — re-derived here independently, on a throttled
+    overload trace where all three components are live."""
+    from repro.serving.admission import AdmissionConfig
+
+    cl = small_cluster(cm, 2,
+                       admission=AdmissionConfig(window_s=5.0, user_rate=8,
+                                                 queue_thresh=0.2))
+    res = cl.run(overload_flood_trace(), max_time=8.0)
+    assert res.n_throttled > 0                   # the throttle engaged
+    unfinished = [r for r in res.requests if r.state != "finished"]
+    assert unfinished                            # the horizon cut work
+    per_replica = [rep.core.wasted_tokens for rep in cl.replicas]
+    partial = sum(max(r.prefill_done - r.cached_prefix, 0) + r.generated
+                  for r in unfinished)
+    assert partial > 0
+    assert res.wasted_tokens() == sum(per_replica) + partial

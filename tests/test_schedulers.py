@@ -292,3 +292,51 @@ def test_batch_config_valid_inputs_still_accepted():
                       slo_budget="auto")
     assert (cfg.prefill_chunk, cfg.kv_page_size, cfg.slo_budget) \
         == (256, 16, "auto")
+
+
+# -- backlog index (DESIGN.md §15): O(backlog) scans, exact legacy order ------
+def test_backlog_prune_then_requeue_head_stays_visible():
+    """``queued_clients`` prunes a drained client from the backlog
+    index; a later ``requeue_head`` (the preemption path) must
+    re-register it — a direct ``queues[...].appendleft`` would leave
+    the request invisible to ``has_waiting`` forever."""
+    s = FCFS()
+    r = _req(0, "a", 0.0)
+    s.on_arrival(r, 0.0)
+    assert s.pop_next(0.0) is r
+    assert s.queued_clients() == [] and not s.has_waiting()  # prunes "a"
+    s.requeue_head(r)
+    assert s.has_waiting() and s.queued_clients() == ["a"]
+    assert s.pop_next(1.0) is r
+
+
+def test_backlog_queued_clients_keeps_insertion_order():
+    """After arbitrary drain/refill cycles ``queued_clients`` must
+    still iterate in first-arrival order — the policies' first-minimal
+    ``min()`` tie-breaks are pinned to the historical queues-dict
+    insertion order."""
+    s = FCFS()
+    for i, c in enumerate(("c", "a", "b")):
+        s.on_arrival(_req(i, c, float(i)), float(i))
+    assert s.queued_clients() == ["c", "a", "b"]
+    s.pop_next(3.0)                     # drains "c" (earliest arrival)
+    assert s.queued_clients() == ["a", "b"]
+    s.on_arrival(_req(3, "c", 4.0), 4.0)
+    assert s.queued_clients() == ["c", "a", "b"]   # rank, not re-add order
+
+
+def test_inflight_drops_zero_entries():
+    """``inflight`` must not accumulate dead accounts: at provider
+    scale every ever-seen client would otherwise be rescanned by each
+    returning-client lift."""
+    s = VTC()
+    r = _req(0, "a", 0.0)
+    s.on_arrival(r, 0.0)
+    s.on_admit(s.pop_next(0.0), 0.0)
+    assert s.inflight == {"a": 1}
+    s.on_complete(r, 1.0, latency=1.0, tps=10.0, util=0.5)
+    assert "a" not in s.inflight
+    s.on_arrival(_req(1, "b", 2.0), 2.0)
+    s.on_admit(s.pop_next(2.0), 2.0)
+    s.on_preempt(_req(1, "b", 2.0), 3.0)
+    assert "b" not in s.inflight
