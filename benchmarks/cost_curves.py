@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import CM, row, run_sim
+from benchmarks.common import row, run_sim
 from repro.core import Request, SimConfig
 
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import CM, row
 from repro.core import Request

@@ -18,7 +18,6 @@ Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 
@@ -157,9 +156,10 @@ def kvq_row():
     shape = INPUT_SHAPES["decode_32k"]
     mf = model_flops(cfg, shape)
     t_comp = mf / (CHIPS * PEAK)
-    # int8 payload + bf16 per-(token, head) scales
-    kv_int8 = kv_read_bytes(cfg, shape.seq_len, ) / 2 \
-        + cfg.n_layers * cfg.n_kv_heads * 2 * shape.seq_len
+    # kv_quant=True on the cfg makes kv_read_bytes price int8 payload +
+    # bf16 per-(token, head) scales itself (DESIGN.md §16) — the old
+    # hand-rolled "/2 + scales" on top of it would discount twice
+    kv_int8 = kv_read_bytes(cfg, shape.seq_len)
     sb = cfg.n_params() * 2 + shape.global_batch * kv_int8
     t_mem = sb / (CHIPS * HBM)
     dr = load_dryrun("deepseek-7b", "decode_32k@kvq")
@@ -193,10 +193,6 @@ def run(quick=False):
     from benchmarks.common import row
     out = []
     for r in all_rows():
-        frac = {k: r[f"t_{k}_s"] / max(sum(r[f"t_{k2}_s"] for k2 in
-                                           ("compute", "memory",
-                                            "collective")), 1e-30)
-                for k in ("compute", "memory", "collective")}
         derived = (f"comp={r['t_compute_s'] * 1e3:.2f}ms "
                    f"mem={r['t_memory_s'] * 1e3:.2f}ms "
                    f"coll={r['t_collective_s'] * 1e3:.2f}ms "

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import fmt_summary, row, run_sim
+from benchmarks.common import row
 from repro.core import Request, SimConfig, make_scheduler
 from repro.core.simulator import Simulator
 from repro.serving.costmodel import A100_80G, CostModel

@@ -19,7 +19,11 @@ Fails (exit 1) if:
 - any field of the `IterationOutcome` dataclass
   (`src/repro/serving/batch_core.py`) is missing from DESIGN.md §15 —
   it is the return contract both frontends and the macro-step fast
-  path share, so a new field must land with its documentation row.
+  path share, so a new field must land with its documentation row;
+- any public kernel entry point (`__all__` in
+  `src/repro/kernels/__init__.py`) is not mentioned (backticked) in
+  DESIGN.md — kernels carry numerics contracts (masking, stats,
+  quantization) that must be written down, not reverse-engineered.
 
     python scripts/check_docs.py
 """
@@ -150,6 +154,29 @@ def check_iteration_outcome(errors):
                 f"shared iteration contract; document it before shipping")
 
 
+KERNEL_ALL_RE = re.compile(r"^__all__\s*=\s*\[(.*?)\]", re.M | re.S)
+
+
+def check_kernel_entry_points(errors):
+    init = ROOT / "src" / "repro" / "kernels" / "__init__.py"
+    design = ROOT / "DESIGN.md"
+    if not init.exists():
+        return
+    m = KERNEL_ALL_RE.search(init.read_text())
+    if not m:
+        errors.append("src/repro/kernels/__init__.py: __all__ list not "
+                      "found (check_docs parses it literally)")
+        return
+    names = re.findall(r"\"([A-Za-z0-9_]+)\"", m.group(1))
+    doc = design.read_text() if design.exists() else ""
+    for name in names:
+        if f"`{name}`" not in doc:
+            errors.append(
+                f"DESIGN.md: kernel entry point `{name}` "
+                f"(kernels/__init__.__all__) is undocumented — every "
+                f"public kernel must land with its DESIGN.md contract")
+
+
 def main() -> int:
     errors: list[str] = []
     check_section_citations(errors)
@@ -157,6 +184,7 @@ def main() -> int:
     check_bench_registry(errors)
     check_telemetry_schema(errors)
     check_iteration_outcome(errors)
+    check_kernel_entry_points(errors)
     if errors:
         print(f"check_docs: {len(errors)} broken cross-reference(s)")
         for e in errors:

@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.configs import SMOKE_FACTORIES
 from repro.models import decode_step, forward_hidden, init_params, prefill
-from repro.models.layers import rmsnorm, unembed
+from repro.models.layers import unembed
 
 B, S = 2, 17
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SMOKE_FACTORIES
-from repro.models import (decode_step, init_cache, init_params, loss_fn,
+from repro.models import (decode_step, init_params, loss_fn,
                           prefill)
 
 B, S = 2, 32

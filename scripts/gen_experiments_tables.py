@@ -1,6 +1,5 @@
 """Generate the §Dry-run and §Roofline markdown tables for EXPERIMENTS.md
 from experiments/dryrun/*.json."""
-import json
 import sys
 
 sys.path.insert(0, "src")

@@ -14,7 +14,7 @@ import argparse
 import numpy as np
 
 from repro.configs import SMOKE_FACTORIES, get_config
-from repro.core import HFObserver, jain, make_scheduler
+from repro.core import jain, make_scheduler
 from repro.predictor import MoPE, Oracle, SingleProxy
 from repro.serving.costmodel import A100_80G, CostModel
 from repro.serving.engine import ServingEngine

@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 
 from repro.configs import SMOKE_FACTORIES, get_config
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.training import TrainConfig, train
 
 

@@ -586,7 +586,6 @@ def mla_decode(params, x, c_cache, krope_cache, pos, cfg, *, window=0):
     c_cache: (B, S, r); krope_cache: (B, S, rope_dim); pos: (B,) int32.
     """
     m = cfg.mla
-    B = x.shape[0]
     S_cache = c_cache.shape[1]
     q_nope, q_rope, c_new, krope_new = _mla_qkv(params, x, pos[:, None], cfg)
     slot = pos % S_cache if window else pos

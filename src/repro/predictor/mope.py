@@ -20,7 +20,7 @@ from repro.core.request import Request
 from repro.predictor.experts import predict_tokens, train_expert
 from repro.predictor.features import featurize, featurize_batch
 from repro.predictor.metric_map import MetricMap
-from repro.predictor.router import Router, regime_of, train_router
+from repro.predictor.router import regime_of, train_router
 from repro.serving.costmodel import CostModel
 
 

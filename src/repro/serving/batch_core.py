@@ -74,6 +74,10 @@ class BatchConfig:
     # time under the strictest running TBT target, and fills it in the
     # scheduler's fairness order instead of admission order.
     slo_budget: str = "static"
+    # int8 KV pages (DESIGN.md §16): halves KV bytes per token, so a
+    # cost-model-derived budget (kv_budget_tokens=None) roughly doubles.
+    # The engine quantizes into int8 pools and dequantizes in-kernel.
+    kv_quant: bool = False
 
     def __post_init__(self):
         """User-input validation — ``ValueError``, never ``assert``
@@ -157,7 +161,8 @@ class BatchCore:
         self.prefix_cache = prefix_cache      # repro.serving.prefix_cache
         #   (property: also threads the locality probe into the scheduler)
         self.kv_budget = (self.cfg.kv_budget_tokens
-                          or cost_model.kv_budget_tokens())
+                          or cost_model.kv_budget_tokens(
+                              kv_quant=self.cfg.kv_quant or None))
         self.kv_page = max(getattr(self.cfg, "kv_page_size", 1) or 1, 1)
         self.admission = as_controller(admission)
         # mutable per-run state: created once, zeroed by ``reset()`` so

@@ -49,25 +49,37 @@ A100_80G = Hardware(name="a100-80g", peak_flops=312e12, hbm_bw=1935e9,
                     prefill_eff=0.5, bw_eff=0.8, batch_overhead=0.006)
 
 
-def kv_bytes_per_token(cfg: ModelConfig, bytes_per_el: int = 2):
+def kv_bytes_per_token(cfg: ModelConfig, bytes_per_el: int = 2,
+                       kv_quant: bool = None):
     """(bytes per cached token, context cap per layer kind list).
 
     Returns a list of (per_token_bytes, window_or_0) per layer so decode
     read cost can respect sliding windows; recurrent layers contribute a
-    fixed state instead (returned separately)."""
+    fixed state instead (returned separately).
+
+    int8 KV pages (DESIGN.md §16; ``kv_quant=None`` reads
+    ``cfg.kv_quant``) store 1 byte per element plus one bf16 scale per
+    (token, head) for K and for V — so an attention layer costs
+    ``2 * Hkv * (hd + 2)`` instead of ``2 * Hkv * hd * 2`` per token:
+    ~2x the tokens in the same HBM.  Recurrent/conv state stays fp."""
+    quant = cfg.kv_quant if kv_quant is None else kv_quant
     per_layer = []
     fixed_state = 0
     hd = cfg.resolved_head_dim()
     for kind in cfg.layer_kinds():
         if kind == ATTN:
-            per_layer.append((2 * cfg.n_kv_heads * hd * bytes_per_el, 0))
+            per_layer.append((2 * cfg.n_kv_heads * (hd + 2) if quant
+                              else 2 * cfg.n_kv_heads * hd * bytes_per_el,
+                              0))
         elif kind == ATTN_LOCAL:
-            per_layer.append((2 * cfg.n_kv_heads * hd * bytes_per_el,
+            per_layer.append((2 * cfg.n_kv_heads * (hd + 2) if quant
+                              else 2 * cfg.n_kv_heads * hd * bytes_per_el,
                               cfg.window))
         elif kind == ATTN_MLA:
             m = cfg.mla
-            per_layer.append(((m.kv_lora_rank + m.qk_rope_head_dim)
-                              * bytes_per_el, cfg.window))
+            rank = m.kv_lora_rank + m.qk_rope_head_dim
+            per_layer.append((rank + 2 if quant else rank * bytes_per_el,
+                              cfg.window))
         elif kind == RGLRU:
             d_rnn = cfg.rglru.d_rnn or cfg.d_model
             fixed_state += d_rnn * (cfg.rglru.conv_width + 1) * bytes_per_el
@@ -257,9 +269,12 @@ class CostModel:
                 / (elapsed * self.hw.chips * self.hw.peak_flops))
         return float(min(util / self.hw.prefill_eff, 1.0))
 
-    def kv_budget_tokens(self, reserve: float = 0.35) -> int:
-        """How many cached tokens fit in HBM after weights (canSchedule M)."""
-        per_layer, fixed = kv_bytes_per_token(self.cfg)
+    def kv_budget_tokens(self, reserve: float = 0.35,
+                         kv_quant: bool = None) -> int:
+        """How many cached tokens fit in HBM after weights (canSchedule M).
+        ``kv_quant=True`` prices int8 KV pages (DESIGN.md §16), roughly
+        doubling the budget for dense-attention stacks."""
+        per_layer, fixed = kv_bytes_per_token(self.cfg, kv_quant=kv_quant)
         per_tok = sum(pt for pt, _ in per_layer)
         free = self.hw.chips * self.hw.hbm_bytes * (1 - reserve) \
             - self.param_bytes

@@ -55,11 +55,17 @@ from repro.models import (decode_step, init_cache, init_params, prefill,
                           prefill_chunk, supports_chunked_prefill)
 from repro.models.layers import dtype_of, embed, mlp, rmsnorm, unembed
 from repro.models.model import model_stages
-from repro.models.attention import apply_rope
+from repro.models.attention import apply_rope, quantize_kv
 from repro.models.moe import moe_ffn
 from repro.serving.batch_core import BatchConfig, BatchCore
 from repro.serving.costmodel import CostModel
-from repro.serving.kv_cache import PagePool, make_pools
+from repro.serving.kv_cache import PagePool, make_pools, scatter_prefill
+
+def _next_pow2(n: int) -> int:
+    """Static-shape bucketing for the jitted decode step (DESIGN.md §16):
+    row counts and table widths round up to powers of two, bounding the
+    number of distinct traces logarithmically."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 class ServingEngine:
@@ -74,6 +80,7 @@ class ServingEngine:
                  target_iter_time: float = 0.25,
                  slo_budget: str = "static",
                  prefix_cache: bool = False,
+                 kv_quant: bool = False,
                  keep_first_logits: bool = False,
                  observer=None, admission=None):
         self.cfg = cfg
@@ -92,11 +99,21 @@ class ServingEngine:
                 f"{cfg.name}: no incremental-prefill support (see " \
                 "models.supports_chunked_prefill)"
         self.chunked = chunked
+        if kv_quant:
+            # int8 KV pages (DESIGN.md §16) live in the paged pools and
+            # are dequantized inside the Pallas kernel; the slots backend
+            # keeps its own fp caches
+            assert backend == "paged" and self.chunked, \
+                "kv_quant requires the paged backend + chunked prefill"
+        self.kv_quant = kv_quant
         self.core = BatchCore(
             scheduler, self.cm,
             BatchConfig(max_batch=max_slots,
                         kv_budget_tokens=kv_budget_tokens
-                        or max_slots * max_len,
+                        # int8 pages halve KV bytes/token, so the same
+                        # physical memory holds ~2x the token budget
+                        or max_slots * max_len * (2 if kv_quant else 1),
+                        kv_quant=kv_quant,
                         default_reserve=128,      # engine's legacy reserve
                         prefill_chunk=prefill_chunk_tokens,
                         target_iter_time=target_iter_time,
@@ -121,15 +138,28 @@ class ServingEngine:
             params = init_params(jax.random.key(seed + 1), cfg)
         self.params = params
         self.backend = backend
+        self.k_scales = self.v_scales = None
         if backend == "paged":
             kinds = {k for k, _, _ in model_stages(cfg)}
             assert kinds == {ATTN} and not cfg.is_encoder_decoder, \
                 "paged backend supports uniform dense-GQA stacks"
             n_pages = -(-self.kv_budget // page_size)
             self.pool = PagePool(n_pages, page_size)
-            self.k_pools, self.v_pools = make_pools(
-                cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
-                cfg.resolved_head_dim(), dtype_of(cfg))
+            # the device pools carry one extra sacrificial page at index
+            # n_pages, invisible to the allocator and its invariants: the
+            # fused ragged launch (DESIGN.md §16) pads its row count to
+            # powers of two and every padding row writes to (and attends
+            # over) this scratch page, never a live request's pages
+            self._scratch_page = n_pages
+            if kv_quant:
+                (self.k_pools, self.v_pools, self.k_scales,
+                 self.v_scales) = make_pools(
+                    cfg.n_layers, n_pages + 1, page_size, cfg.n_kv_heads,
+                    cfg.resolved_head_dim(), quantized=True)
+            else:
+                self.k_pools, self.v_pools = make_pools(
+                    cfg.n_layers, n_pages + 1, page_size, cfg.n_kv_heads,
+                    cfg.resolved_head_dim(), dtype_of(cfg))
         else:
             self.cache = init_cache(cfg, max_slots, max_len)
             # inactive slots decode garbage into slot 0 tokens — masked out
@@ -284,32 +314,90 @@ class ServingEngine:
                                                req._pcache)
         return logits[0]
 
-    def _prefill_chunk_paged(self, req: Request, start: int, chunk: int):
-        """Chunked prefill through the Pallas paged-attention path: write
-        the chunk's K/V into this request's pages and attend with the
-        chunk rows as a batch of staggered contexts — token i sees
-        ctx_len = start+i+1, which is exactly causal prefix+chunk
-        attention, so ``_paged_decode_step`` is reused verbatim."""
-        self.pool.ensure(req.rid, start + chunk)
-        width = self.pool.pages_needed(self.max_len)   # static jit shape
-        bt = np.tile(self.pool.block_table([req.rid], width), (chunk, 1))
-        ctx = start + np.arange(chunk, dtype=np.int32)
-        tokens = req.prompt_tokens[start:start + chunk]
-        logits, self.k_pools, self.v_pools = _paged_decode_step(
-            self.params, jnp.asarray(tokens), jnp.asarray(ctx),
-            jnp.asarray(bt), self.k_pools, self.v_pools, self.cfg,
-            self.pool.page_size)
-        return logits[-1]
-
     def _run_prefill(self, req: Request, start: int, chunk: int):
         """Execute one planned chunk; returns the last-token logits row
-        (meaningful only when this chunk completes the prompt)."""
+        (meaningful only when this chunk completes the prompt).  Chunked
+        paged prefill does not come through here — it rides the fused
+        ragged launch (``_run_mixed_paged``)."""
         if not self.chunked:
             assert start == 0 and chunk == req.prompt_len
             return self._prefill_whole(req)
-        if self.backend == "paged":
-            return self._prefill_chunk_paged(req, start, chunk)
         return self._prefill_chunk_slots(req, start, chunk)
+
+    def _run_mixed_paged(self, plan, decoding: List[Request]):
+        """The fused mixed iteration (DESIGN.md §16): every planned
+        prefill-chunk token and every decode row of this iteration goes
+        down in ONE ``_paged_decode_step`` call — a ragged launch where
+        row r writes its K/V at position ``ctx[r]`` of request
+        ``row_map[r]``'s pages and attends its causal prefix.  A prompt
+        chunk is just a run of rows with staggered ctx over one table
+        row; a decode is a single row.  The scheduler already prices
+        these as one fused pass (``mixed_step_time``) — now the kernel
+        launch agrees with the cost model.
+
+        Shapes are bucketed to powers of two (rows, table rows, table
+        width) so the jitted step never retraces on page-boundary
+        crossings or batch jitter; padding rows write token 0 at pos 0 of
+        the sacrificial scratch page and their logits are sliced away.
+
+        Returns ({rid: last-chunk-row logits}, {rid: decode logits})."""
+        if not plan and not decoding:
+            return {}, {}
+        tokens: List[int] = []
+        ctx: List[int] = []
+        rmap: List[int] = []
+        last_row: Dict[int, int] = {}
+        for t, (req, chunk) in enumerate(plan):
+            start = req.prefill_done - chunk
+            self.pool.ensure(req.rid, start + chunk)
+            tokens.extend(int(x) for x in
+                          req.prompt_tokens[start:start + chunk])
+            ctx.extend(range(start, start + chunk))
+            rmap.extend([t] * chunk)
+            last_row[req.rid] = len(tokens) - 1
+        n_chunk_rows = len(tokens)
+        for i, r in enumerate(decoding):
+            self.pool.extend(r.rid, r._pos, r._pos + 1)
+            tokens.append(int(r._next_token))
+            ctx.append(r._pos)
+            rmap.append(len(plan) + i)
+        rids = [req.rid for req, _ in plan] + [r.rid for r in decoding]
+        n_t = len(rids)
+        # static-unless-overflowing table width: normally
+        # pages_needed(max_len), but requests may legitimately outgrow
+        # max_len (output length is not capped by it), so widen in
+        # power-of-two buckets instead of truncating their tables
+        width = self.pool.pages_needed(self.max_len)
+        for rid in rids:
+            width = max(width, len(self.pool.owned.get(rid, ())))
+        width = _next_pow2(width)
+        n_tab = _next_pow2(n_t + 1)       # >=1 spare row: the scratch page
+        bt = np.full((n_tab, width), self._scratch_page, np.int32)
+        bt[:n_t] = self.pool.block_table(rids, width)
+        n_rows = len(tokens)
+        n_pad = _next_pow2(n_rows)
+        if n_pad > n_rows:                # padding rows: token 0 at pos 0
+            tokens += [0] * (n_pad - n_rows)   # on the scratch page (all
+            ctx += [0] * (n_pad - n_rows)      # write identical values);
+            rmap += [n_t] * (n_pad - n_rows)   # ctx=0 => fully masked
+        step_args = (self.params, jnp.asarray(np.asarray(tokens, np.int32)),
+                     jnp.asarray(np.asarray(ctx, np.int32)),
+                     jnp.asarray(bt),
+                     jnp.asarray(np.asarray(rmap, np.int32)))
+        if self.kv_quant:
+            (logits, self.k_pools, self.v_pools, self.k_scales,
+             self.v_scales) = _paged_decode_step(
+                *step_args, self.k_pools, self.v_pools, self.k_scales,
+                self.v_scales, self.cfg, self.pool.page_size)
+        else:
+            logits, self.k_pools, self.v_pools = _paged_decode_step(
+                *step_args, self.k_pools, self.v_pools, None, None,
+                self.cfg, self.pool.page_size)
+        logits = np.asarray(logits, np.float32)
+        first_rows = {rid: logits[i] for rid, i in last_row.items()}
+        rows = {r.rid: logits[n_chunk_rows + i]
+                for i, r in enumerate(decoding)}
+        return first_rows, rows
 
     def _install_prefill(self, req: Request, row):
         """Prompt fully prefilled: make the request decodable.  For the
@@ -320,23 +408,18 @@ class ServingEngine:
         if self.backend == "paged":
             if not self.chunked:
                 # copy contiguous prefill cache into this request's pages
+                # (shared pool-scatter helper — one implementation of the
+                # page-boundary pad-and-set logic)
                 self.pool.alloc(req.rid, req.prompt_len + 1)
                 sc = req._pcache["stages"]["stage_0"]
                 pages = self.pool.owned[req.rid]
                 ps = self.pool.page_size
-                k = sc["k"][:, 0]                     # (L, S_c, Hkv, D)
-                v = sc["v"][:, 0]
-                for pi, pg in enumerate(pages):
-                    lo = pi * ps
-                    if lo >= req.prompt_len:
-                        break
-                    hi = min(lo + ps, req.prompt_len)
-                    kc, vc = k[:, lo:hi], v[:, lo:hi]
-                    if hi - lo < ps:
-                        pad = ((0, 0), (0, ps - (hi - lo)), (0, 0), (0, 0))
-                        kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
-                    self.k_pools = self.k_pools.at[:, pg].set(kc)
-                    self.v_pools = self.v_pools.at[:, pg].set(vc)
+                self.k_pools = scatter_prefill(
+                    self.k_pools, sc["k"][:, 0], pages, ps,
+                    n_tokens=req.prompt_len)
+                self.v_pools = scatter_prefill(
+                    self.v_pools, sc["v"][:, 0], pages, ps,
+                    n_tokens=req.prompt_len)
         else:
             def put(dst, src):
                 return dst.at[:, slot].set(src[:, 0])
@@ -366,27 +449,12 @@ class ServingEngine:
             self.params, jnp.asarray(tokens_np), self.cache)
         return logits
 
-    def _decode_paged(self, tokens_np, reqs):
-        ctx = np.array([r._pos for r in reqs], np.int32)
-        for r in reqs:
-            self.pool.extend(r.rid, r._pos, r._pos + 1)
-        width = max(len(self.pool.owned[r.rid]) for r in reqs)
-        bt = self.pool.block_table([r.rid for r in reqs], width)
-        logits, self.k_pools, self.v_pools = _paged_decode_step(
-            self.params, jnp.asarray(tokens_np), jnp.asarray(ctx),
-            jnp.asarray(bt), self.k_pools, self.v_pools, self.cfg,
-            self.pool.page_size)
-        return logits
-
     def _decode(self, decoding: List[Request]):
         """Batched one-token decode; returns {rid: logits row (np)}."""
         if not decoding:
             return {}
         if self.backend == "paged":
-            tokens = np.array([r._next_token for r in decoding], np.int32)
-            logits = np.asarray(self._decode_paged(tokens, decoding),
-                                np.float32)
-            return {r.rid: logits[i] for i, r in enumerate(decoding)}
+            return self._run_mixed_paged([], decoding)[1]
         tokens = np.zeros(self.max_slots, np.int32)
         for r in decoding:
             tokens[r._slot] = r._next_token
@@ -437,19 +505,26 @@ class ServingEngine:
             self._drop_backend_state(req)
             self.running.remove(req)
 
-        # 2. chunked prefill (per-request plan shared with the simulator)
+        # 2+3. chunked prefill + batched decode of every request that was
+        #    DECODING at iteration start (requests finishing prefill this
+        #    iteration emit their first token below and decode from the
+        #    next one).  On the chunked paged backend both go down in ONE
+        #    ragged kernel launch (DESIGN.md §16) — the fused pass the
+        #    cost model already prices as ``mixed_step_time``.
         plan = self.core.plan_prefill(self.running)
-        done_prefill = []
-        for req, chunk in plan:
-            row = self._run_prefill(req, req.prefill_done - chunk, chunk)
-            if req.prefill_done >= req.prompt_len:
-                done_prefill.append((req, row))
-
-        # 3. batched decode of every request that was DECODING at
-        #    iteration start (requests finishing prefill this iteration
-        #    emit their first token below and decode from the next one)
         decoding = [r for r in self.running if r.state == DECODING]
-        rows = self._decode(decoding)
+        if self.backend == "paged" and self.chunked:
+            first_rows, rows = self._run_mixed_paged(plan, decoding)
+            done_prefill = [(req, first_rows[req.rid]) for req, _ in plan
+                            if req.prefill_done >= req.prompt_len]
+        else:
+            done_prefill = []
+            for req, chunk in plan:
+                row = self._run_prefill(req, req.prefill_done - chunk,
+                                        chunk)
+                if req.prefill_done >= req.prompt_len:
+                    done_prefill.append((req, row))
+            rows = self._decode(decoding)
 
         # 4. modeled clock advance (timing rule shared with the simulator)
         ctxs = [r.prompt_len + r.generated for r in decoding]
@@ -536,36 +611,51 @@ import functools
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "page_size"))
-def _paged_decode_step(params, tokens, ctx_lens, block_tables, k_pools,
-                       v_pools, cfg: ModelConfig, page_size: int):
-    """tokens: (B,); ctx_lens: (B,) current lengths (new token appended at
-    position ctx_lens[b]); block_tables: (B, W).
+def _paged_decode_step(params, tokens, ctx_lens, block_tables, row_map,
+                       k_pools, v_pools, k_scales, v_scales,
+                       cfg: ModelConfig, page_size: int):
+    """The fused ragged mixed-iteration step (DESIGN.md §16).
 
-    Also the chunked-prefill step: a prompt chunk is a batch of rows over
-    ONE request's pages with staggered ctx_lens (start+1 .. start+C) —
-    each row writes its K/V then attends its causal prefix through the
-    same Pallas paged-attention kernel."""
-    B = tokens.shape[0]
+    tokens/ctx_lens/row_map: (R,) — row r writes its K/V at position
+    ctx_lens[r] of table row row_map[r]'s pages, then attends its causal
+    prefix (ctx_lens[r]+1 tokens).  block_tables: (T, W) compact
+    per-request table, T decoupled from R so a prompt chunk is a run of
+    rows with staggered ctx over one table row and a decode is a single
+    row — one launch covers both.
+
+    int8 KV pages: when ``k_pools``/``v_pools`` are int8, ``k_scales``/
+    ``v_scales`` are the per-(slot, head) bf16 scale pools; new tokens
+    are quantized with ``quantize_kv`` before the pool write and the
+    Pallas kernel dequantizes in-VMEM (the dtype is static under jit, so
+    the quant path costs nothing when disabled)."""
+    R = tokens.shape[0]
+    quant = k_pools.dtype == jnp.int8
     x = embed(params["embed"], tokens)[:, None].astype(dtype_of(cfg))
     pos = ctx_lens
     stage = params["stages"]["stage_0"]
-    L = cfg.n_layers
-    barange = jnp.arange(B)
-    page_idx = block_tables[barange, pos // page_size]   # (B,)
+    rarange = jnp.arange(R)
+    my_table = block_tables[row_map]                     # (R, W)
+    page_idx = my_table[rarange, pos // page_size]       # (R,)
     slot_idx = pos % page_size
     moe_flag = cfg.moe is not None
 
-    def body(carry, lp):
-        x, kp, vp = carry
+    def body(x, lp, kp, vp, ks, vs):
         h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
         q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
         k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
         v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
         q = apply_rope(q, pos[:, None], cfg.rope_theta)[:, 0]
         k = apply_rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+        v = v[:, 0]
+        if quant:
+            k, k_s = quantize_kv(k)
+            v, v_s = quantize_kv(v)
+            ks = ks.at[page_idx, slot_idx].set(k_s)
+            vs = vs.at[page_idx, slot_idx].set(v_s)
         kp = kp.at[page_idx, slot_idx].set(k)
-        vp = vp.at[page_idx, slot_idx].set(v[:, 0])
-        out = paged_attention(q, kp, vp, block_tables, pos + 1)
+        vp = vp.at[page_idx, slot_idx].set(v)
+        out = paged_attention(q, kp, vp, block_tables, pos + 1,
+                              row_map=row_map, k_scale=ks, v_scale=vs)
         y = jnp.einsum("bhk,hkd->bd", out, lp["attn"]["wo"])[:, None]
         x = x + y
         h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
@@ -574,16 +664,27 @@ def _paged_decode_step(params, tokens, ctx_lens, block_tables, k_pools,
         else:
             f = mlp(lp["ffn"], h2, cfg.act)
         x = x + f
-        return (x, kp, vp), None
+        return x, kp, vp, ks, vs
 
-    def scan_body(carry, layer_inputs):
-        lp, kp_l, vp_l = layer_inputs
-        x = carry
-        (x, kp_l, vp_l), _ = body((x, kp_l, vp_l), lp)
-        return x, (kp_l, vp_l)
+    if quant:
+        def scan_body(x, layer_inputs):
+            lp, kp_l, vp_l, ks_l, vs_l = layer_inputs
+            x, kp_l, vp_l, ks_l, vs_l = body(x, lp, kp_l, vp_l, ks_l,
+                                             vs_l)
+            return x, (kp_l, vp_l, ks_l, vs_l)
 
-    x, (k_new, v_new) = jax.lax.scan(
-        scan_body, x, (stage, k_pools, v_pools))
+        x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+            scan_body, x, (stage, k_pools, v_pools, k_scales, v_scales))
+    else:
+        def scan_body(x, layer_inputs):
+            lp, kp_l, vp_l = layer_inputs
+            x, kp_l, vp_l, _, _ = body(x, lp, kp_l, vp_l, None, None)
+            return x, (kp_l, vp_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            scan_body, x, (stage, k_pools, v_pools))
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x[:, 0])
+    if quant:
+        return logits, k_new, v_new, ks_new, vs_new
     return logits, k_new, v_new

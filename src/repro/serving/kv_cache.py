@@ -195,29 +195,50 @@ class PagePool:
 
 
 def make_pools(n_layers: int, n_pages: int, page_size: int, n_kv_heads: int,
-               head_dim: int, dtype=jnp.float32):
-    """Stacked per-layer K/V pools: (L, n_pages, page, Hkv, D)."""
+               head_dim: int, dtype=jnp.float32, quantized: bool = False):
+    """Stacked per-layer K/V pools: (L, n_pages, page, Hkv, D).
+
+    ``quantized=True`` (DESIGN.md §16) returns int8 payload pools plus
+    per-(slot, head) bf16 scale pools (L, n_pages, page, Hkv) — the
+    ``quantize_kv`` contract (scales are the payload shape minus the
+    trailing head_dim axis).  Zero-initialized scales are safe: an unwritten
+    slot dequantizes to exact zeros."""
     shape = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+    if quantized:
+        return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                jnp.zeros(shape[:-1], jnp.bfloat16),
+                jnp.zeros(shape[:-1], jnp.bfloat16))
     return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def scatter_prefill(pool, layer_caches, pages: List[int], page_size: int,
+                    n_tokens: Optional[int] = None):
+    """Scatter contiguous K or V rows (L, S, Hkv, D) into ``pages``,
+    zero-padding the final partial page.  The one implementation of the
+    page-boundary pad-and-set logic — shared by ``write_prefill_to_pool``
+    and the engine's non-chunked install path.  ``n_tokens`` caps the
+    copied prefix (the contiguous cache may be wider than the prompt)."""
+    S = layer_caches.shape[1]
+    if n_tokens is not None:
+        S = min(S, n_tokens)
+    for pi, pg in enumerate(pages):
+        lo = pi * page_size
+        if lo >= S:
+            break
+        hi = min(lo + page_size, S)
+        chunk = layer_caches[:, lo:hi]
+        if hi - lo < page_size:
+            chunk = jnp.pad(chunk, ((0, 0), (0, page_size - (hi - lo)),
+                                    (0, 0), (0, 0)))
+        pool = pool.at[:, pg].set(chunk)
+    return pool
 
 
 def write_prefill_to_pool(pool, layer_caches, pages: List[int],
                           page_size: int):
     """Scatter a request's contiguous prefill K (L, S, Hkv, D) into its
     pages.  Host-side op (np/at-set); done once per admitted request."""
-    L, S = layer_caches.shape[0], layer_caches.shape[1]
-    n_full = S // page_size
-    for pi in range(len(pages)):
-        lo = pi * page_size
-        hi = min(lo + page_size, S)
-        if lo >= S:
-            break
-        chunk = layer_caches[:, lo:hi]
-        if hi - lo < page_size:
-            pad = page_size - (hi - lo)
-            chunk = jnp.pad(chunk, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        pool = pool.at[:, pages[pi]].set(chunk)
-    return pool
+    return scatter_prefill(pool, layer_caches, pages, page_size)
 
 
 def write_token_to_pool(pool, kv_token, pages: List[int], pos: int,

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, SMOKE_FACTORIES
-from repro.models import (decode_step, forward_hidden, init_cache,
+from repro.models import (decode_step, forward_hidden,
                           init_params, loss_fn, prefill)
 from repro.training.optim import adam
 

@@ -3,7 +3,7 @@ import pytest
 
 from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, SMOKE_FACTORIES,
                            get_config, list_archs)
-from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA2, RGLRU
+from repro.configs.base import ATTN, ATTN_LOCAL, RGLRU
 from repro.models import long_context_variant
 from repro.models.model import model_stages
 

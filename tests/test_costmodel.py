@@ -1,11 +1,9 @@
 """Analytic cost model: the paper's Figure-2 qualitative shapes must
 emerge (monotone latency, non-monotone throughput, KV-dependent decode)."""
-import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.serving.costmodel import (A100_80G, CostModel, kv_bytes_per_token,
-                                     kv_read_bytes)
+from repro.serving.costmodel import A100_80G, CostModel, kv_read_bytes
 
 
 @pytest.fixture(scope="module")

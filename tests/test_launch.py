@@ -2,7 +2,6 @@
 real 1-device lower+compile through the exact dry-run code path."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import INPUT_SHAPES, SMOKE_FACTORIES, get_config

@@ -1,5 +1,4 @@
 """MoE: dispatch implementation vs dense oracle, load-balance aux."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """MoPE: router accuracy, expert specialization beats a single proxy,
 metric-map online calibration (paper §6 claims, scaled down)."""
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -29,7 +29,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import (HAVE_HYPOTHESIS, RuleBasedStateMachine,
                                 invariant, rule, run_state_machine_as_test,
-                                settings, st)
+                                st)
 
 from repro.core import Request
 from repro.serving.kv_cache import PagePool

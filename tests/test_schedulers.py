@@ -1,5 +1,4 @@
 """Scheduler policies: ordering, lifts, quotas, VTC-limit equivalence."""
-import numpy as np
 import pytest
 
 from repro.core import HFParams, Request, make_scheduler

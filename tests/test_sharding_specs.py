@@ -27,8 +27,6 @@ MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
 def test_param_specs_match_tree_and_divide(arch):
     cfg = SMOKE_FACTORIES[arch]()          # small params, same structure
     params = init_params(jax.random.key(0), cfg)
-    full = get_config(arch)
-    # use the FULL config's dims for divisibility checks on full shapes
     specs = param_specs(params, cfg, MESH)
     assert jax.tree.structure(params) == jax.tree.structure(
         specs, is_leaf=lambda x: isinstance(x, P))

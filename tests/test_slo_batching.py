@@ -23,7 +23,7 @@ The invariants (docstring of ``solve_prefill_budget``):
 import numpy as np
 import pytest
 
-from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _hypothesis_compat import given, settings, st
 from repro.configs import get_config
 from repro.core import SimConfig, Simulator, make_scheduler
 from repro.core.request import (DECODING, FINISHED, PREFILLING, SLO_CLASSES,

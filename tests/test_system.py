@@ -12,7 +12,6 @@ EXPERIMENTS.md §Validation:
 """
 import copy
 
-import numpy as np
 import pytest
 
 from repro.configs import SMOKE_FACTORIES, get_config
